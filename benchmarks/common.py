@@ -1,0 +1,48 @@
+"""Benchmark helpers: timing + CSV emission contract.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows (the
+contract of benchmarks/run.py); ``derived`` carries the table-specific
+figure (rows/s, speedup, ...).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-seconds per call (block_until_ready on jax outputs)."""
+
+    def run():
+        out = fn(*args)
+        jax.block_until_ready(out)
+        return out
+
+    for _ in range(warmup):
+        run()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        run()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def time_host(fn: Callable, *args, warmup: int = 0, iters: int = 3) -> float:
+    for _ in range(warmup):
+        fn(*args)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, seconds: float, derived: str) -> None:
+    print(f"{name},{seconds * 1e6:.1f},{derived}")

@@ -1,0 +1,57 @@
+"""Figure 10 analogue: PIPER stage time breakdown.
+
+The paper breaks local-mode execution into Get Row Number / Initialize
+Buffer / Assign Values / Kernel Execution. The engine's analogous
+stages: chunking (host framing), decode, modulus, loop-① vocab build,
+finalize, loop-② transform.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import ops, pipeline as P, schema as schema_lib, vocab as vocab_lib
+from repro.data import synth
+from benchmarks.common import emit, time_fn, time_host
+
+ROWS = 6_000
+CHUNK = 1 << 17
+
+
+def main() -> None:
+    schema = schema_lib.CRITEO
+    scfg = synth.SynthConfig(schema=schema, rows=ROWS, seed=0)
+    buf, _ = synth.make_dataset(scfg)
+    pipe = P.PiperPipeline(
+        P.PipelineConfig(schema=schema, chunk_bytes=CHUNK, max_rows_per_chunk=2048)
+    )
+
+    sec = time_host(lambda: list(synth.chunk_stream(buf, CHUNK)))
+    emit("fig10/host_chunk_framing", sec, "")
+
+    chunks = [jnp.asarray(c) for c in synth.chunk_stream(buf, CHUNK)]
+    sec = time_fn(lambda: [pipe.decode_chunk(c).sparse for c in chunks])
+    emit("fig10/decode", sec, "")
+
+    batches = [pipe.decode_chunk(c) for c in chunks]
+    sec = time_fn(
+        lambda: [ops.positive_modulus(b.sparse, schema.vocab_range) for b in batches]
+    )
+    emit("fig10/modulus", sec, "")
+
+    sec = time_fn(lambda: pipe.build_vocab_stream(iter(chunks)).table)
+    emit("fig10/loop1_genvocab", sec, "")
+
+    vocab = pipe.build_vocab_stream(iter(chunks))
+    state = pipe.init_state()
+    for c in chunks:
+        state = pipe.vocab_step(state, c)
+    sec = time_fn(lambda: vocab_lib.finalize(state).table)
+    emit("fig10/finalize_rank", sec, "")
+
+    sec = time_fn(lambda: [pipe.transform_chunk(vocab, c).sparse for c in chunks])
+    emit("fig10/loop2_transform", sec, "")
+
+
+if __name__ == "__main__":
+    main()

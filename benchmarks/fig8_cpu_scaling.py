@@ -1,0 +1,95 @@
+"""Figure 8 analogue: row-wise CPU baseline scaling with thread count.
+
+Reproduces the paper's scaling-collapse result: per-stage wall time for
+the row-partitioned pipeline at 1..16 threads, with the stateful
+sub-dictionary merge modeled faithfully. Threads are emulated (each
+thread's work timed, wall time = max over threads + serial merge), so
+numbers reflect the algorithmic scaling behaviour the paper plots, not
+the host's actual core count.
+
+Output columns: config,threads,stage → seconds.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import baseline, schema as schema_lib
+from repro.data import synth
+from benchmarks.common import emit
+
+ROWS = 6_000
+THREADS = (1, 2, 4, 8, 16)
+
+
+def run_config(name: str, vocab_range: int, binary: bool) -> None:
+    schema = schema_lib.TableSchema(vocab_range=vocab_range)
+    cfg = synth.SynthConfig(schema=schema, rows=ROWS, seed=0)
+    buf, table = synth.make_dataset(cfg)
+
+    for n_threads in THREADS:
+        t0 = time.perf_counter()
+        if binary:
+            rows = table["label"].shape[0]
+            slices = [
+                slice((rows * t) // n_threads, (rows * (t + 1)) // n_threads)
+                for t in range(n_threads)
+            ]
+            parts = [
+                {k: table[k][s] for k in ("label", "dense", "sparse")}
+                for s in slices
+            ]
+            t_sif = time.perf_counter() - t0
+            t_decode_max = 0.0
+        else:
+            subs = baseline.split_input_file(buf, n_threads)
+            t_sif = time.perf_counter() - t0
+            decode_times, parts = [], []
+            for s in subs:
+                td = time.perf_counter()
+                parts.append(baseline.decode_rows_serial(s, schema))
+                decode_times.append(time.perf_counter() - td)
+            t_decode_max = max(decode_times)
+
+        gv_times, subdicts = [], []
+        for p in parts:
+            tg = time.perf_counter()
+            modded = baseline.positive_modulus(p["sparse"], schema.vocab_range)
+            subdicts.append(baseline.generate_vocab_thread(modded, schema))
+            gv_times.append(time.perf_counter() - tg)
+        t_gv_max = max(gv_times)
+
+        tm = time.perf_counter()
+        vocab = baseline.merge_sub_dictionaries(subdicts, schema)  # SERIAL
+        t_merge = time.perf_counter() - tm
+
+        av_times, outs = [], []
+        for p in parts:
+            ta = time.perf_counter()
+            outs.append(baseline.apply_vocab(p, vocab, schema))
+            av_times.append(time.perf_counter() - ta)
+        t_av_max = max(av_times)
+
+        tc = time.perf_counter()
+        baseline.concatenate(outs)
+        t_cfr = time.perf_counter() - tc
+
+        wall = t_sif + t_decode_max + t_gv_max + t_merge + t_av_max + t_cfr
+        emit(
+            f"fig8/{name}/threads{n_threads}",
+            wall,
+            f"rows_per_s={ROWS / wall:.0f};sif={t_sif:.3f};decode={t_decode_max:.3f};"
+            f"gv={t_gv_max:.3f};merge={t_merge:.3f};av={t_av_max:.3f};cfr={t_cfr:.3f}",
+        )
+
+
+def main() -> None:
+    run_config("vocab5k_utf8", 5_000, binary=False)
+    run_config("vocab5k_binary", 5_000, binary=True)
+    run_config("vocab1m_utf8", 1_000_000, binary=False)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Figure 9 analogue: end-to-end preprocessing latency.
+
+CPU row-wise baseline (best thread count) vs the PIPER columnar engine
+in streaming ("network") mode and one-shot ("local") mode, for UTF-8 and
+binary inputs at both vocabulary tiers — the four panels of Figure 9.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import baseline, pipeline as P, schema as schema_lib
+from repro.data import synth
+from benchmarks.common import emit, time_fn, time_host
+
+ROWS = 6_000
+CHUNK = 1 << 17
+
+
+def main() -> None:
+    for vocab_range, tag in ((5_000, "5k"), (1_000_000, "1m")):
+        schema = schema_lib.TableSchema(vocab_range=vocab_range)
+        scfg = synth.SynthConfig(schema=schema, rows=ROWS, seed=0)
+        buf, table = synth.make_dataset(scfg)
+
+        for fmt, binary in (("utf8", False), ("binary", True)):
+            cpu_sec = min(
+                time_host(
+                    lambda t=t: baseline.run_pipeline(
+                        buf, schema, n_threads=t,
+                        binary_input=table if binary else None,
+                    ),
+                    iters=1,
+                )
+                for t in (1, 4)
+            )
+            emit(f"fig9/{tag}/{fmt}/cpu_best", cpu_sec, f"rows_per_s={ROWS/cpu_sec:.0f}")
+
+            pc = P.PipelineConfig(
+                schema=schema, chunk_bytes=CHUNK, max_rows_per_chunk=2048,
+                input_format="binary" if binary else "utf8",
+            )
+            pipe = P.PiperPipeline(pc)
+            if binary:
+                chunks = [{k: jnp.asarray(table[k]) for k in ("label", "dense", "sparse")}]
+            else:
+                chunks = [jnp.asarray(c) for c in synth.chunk_stream(buf, CHUNK)]
+
+            def stream():
+                vocab = pipe.build_vocab_stream(iter(chunks))
+                for _ in pipe.transform_stream(vocab, iter(chunks)):
+                    pass
+
+            sec = time_fn(lambda: stream() or jnp.zeros(()))
+            emit(
+                f"fig9/{tag}/{fmt}/piper_network_stream",
+                sec,
+                f"rows_per_s={ROWS/sec:.0f};speedup_vs_cpu={cpu_sec/sec:.1f}x",
+            )
+
+            if not binary:
+                stacked = jnp.stack(chunks)
+                sec = time_fn(lambda: pipe.run_scan(stacked).sparse)
+                emit(
+                    f"fig9/{tag}/{fmt}/piper_local_scan",
+                    sec,
+                    f"rows_per_s={ROWS/sec:.0f};speedup_vs_cpu={cpu_sec/sec:.1f}x",
+                )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Benchmark driver: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. The roofline section reads
+the dry-run artifacts when present (run ``python -m repro.launch.dryrun
+--all --mesh both`` first for the full table).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig8,table3,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (
+    fig8_cpu_scaling,
+    fig9_end2end,
+    fig10_breakdown,
+    table3_throughput,
+    table4_operators,
+)
+
+SECTIONS = {
+    "fig8": fig8_cpu_scaling.main,
+    "table3": table3_throughput.main,
+    "table4": table4_operators.main,
+    "fig9": fig9_end2end.main,
+    "fig10": fig10_breakdown.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated section names")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(SECTIONS)
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name in names:
+        if name == "roofline":
+            continue
+        try:
+            SECTIONS[name]()
+        except Exception as e:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+            print(f"{name}/ERROR,0,{type(e).__name__}")
+
+    # roofline: best-effort (requires dry-run artifacts)
+    try:
+        from benchmarks import roofline
+
+        print("\n=== §Roofline (from dry-run artifacts) ===")
+        roofline.main()
+    except Exception:  # noqa: BLE001
+        traceback.print_exc()
+        print("roofline/SKIPPED (run the dry-run first)")
+
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

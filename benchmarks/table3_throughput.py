@@ -1,0 +1,83 @@
+"""Table 3 analogue: pure-computation throughput (rows/second).
+
+The paper's Table 3 compares rows/s of the CPU baseline (per thread
+count) against PIPER local/network for {UTF-8, binary} × {5K, 1M}
+vocabularies, excluding data movement. Here the "CPU baseline" is the
+faithful row-wise pipeline (numpy/dict), and "PIPER-JAX" is the columnar
+two-loop engine jitted on the host device — the architectural comparison
+(columnar, synchronization-free, vectorized vs row-wise with a serial
+merge) measured on identical silicon. The TPU-projected numbers live in
+the roofline analysis, not here.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baseline, pipeline as P, schema as schema_lib
+from repro.data import synth
+from benchmarks.common import emit, time_fn, time_host
+
+ROWS = 6_000
+CHUNK = 1 << 18
+
+
+def _piper_rows_per_s(schema, buf, table, binary: bool) -> float:
+    pc = P.PipelineConfig(
+        schema=schema,
+        chunk_bytes=CHUNK,
+        max_rows_per_chunk=4096,
+        input_format="binary" if binary else "utf8",
+    )
+    pipe = P.PiperPipeline(pc)
+    if binary:
+        chunks = [
+            {k: jnp.asarray(v) for k, v in table.items() if k in ("label", "dense", "sparse")}
+        ]
+    else:
+        chunks = [jnp.asarray(c) for c in synth.chunk_stream(buf, CHUNK)]
+
+    def run():
+        vocab = pipe.build_vocab_stream(iter(chunks))
+        return list(pipe.transform_stream(vocab, iter(chunks)))
+
+    sec = time_fn(run, warmup=1, iters=3)
+    return ROWS / sec
+
+
+def _cpu_rows_per_s(schema, buf, table, binary: bool, threads: int) -> float:
+    def run():
+        baseline.run_pipeline(
+            buf, schema, n_threads=threads, binary_input=table if binary else None
+        )
+
+    sec = time_host(run, iters=1)
+    return ROWS / sec
+
+
+def main() -> None:
+    for vocab_range, tag in ((5_000, "5k"), (1_000_000, "1m")):
+        schema = schema_lib.TableSchema(vocab_range=vocab_range)
+        cfg = synth.SynthConfig(schema=schema, rows=ROWS, seed=0)
+        buf, table = synth.make_dataset(cfg)
+        for binary in (False, True):
+            fmt = "binary" if binary else "utf8"
+            cpu_best = max(
+                _cpu_rows_per_s(schema, buf, table, binary, t) for t in (1, 4)
+            )
+            piper = _piper_rows_per_s(schema, buf, table, binary)
+            emit(
+                f"table3/{tag}/{fmt}/cpu_rowwise",
+                ROWS / cpu_best,
+                f"rows_per_s={cpu_best:.0f}",
+            )
+            emit(
+                f"table3/{tag}/{fmt}/piper_columnar",
+                ROWS / piper,
+                f"rows_per_s={piper:.0f};speedup={piper / cpu_best:.1f}x",
+            )
+
+
+if __name__ == "__main__":
+    main()

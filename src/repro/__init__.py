@@ -1,0 +1,10 @@
+"""repro — PIPER-JAX: TPU-native tabular data preprocessing for ML pipelines.
+
+A production-grade JAX reproduction (and beyond-paper optimization) of
+"Efficient Tabular Data Preprocessing of ML Pipelines" (PIPER, 2024):
+column-wise, synchronization-free stateful preprocessing, a parallel
+UTF-8 decode kernel, memory-tiered vocabulary tables, and a streaming
+two-loop dataflow — embedded in a multi-pod training/serving framework.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,32 @@
+"""The paper's own workload config: PIPER preprocessing + DLRM training
+on the Criteo schema (1 label + 13 dense + 26 sparse), vocab 5K and 1M
+variants (the two memory tiers evaluated in the paper)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import pipeline as pipeline_lib
+from repro.core import schema as schema_lib
+from repro.models import dlrm
+
+
+@dataclasses.dataclass(frozen=True)
+class PiperDLRMConfig:
+    name: str
+    pipeline: pipeline_lib.PipelineConfig
+    model: dlrm.DLRMConfig
+
+
+def _make(name: str, vocab_range: int) -> PiperDLRMConfig:
+    schema = dataclasses.replace(schema_lib.CRITEO, vocab_range=vocab_range)
+    return PiperDLRMConfig(
+        name=name,
+        pipeline=pipeline_lib.PipelineConfig(schema=schema),
+        model=dlrm.DLRMConfig(vocab_range=vocab_range),
+    )
+
+
+CONFIG_5K = _make("piper-dlrm-5k", 5_000)
+CONFIG_1M = _make("piper-dlrm-1m", 1_000_000)
+SMOKE = _make("piper-dlrm-smoke", 257)

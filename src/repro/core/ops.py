@@ -1,0 +1,69 @@
+"""Stateless PIPER operators (paper Table 1) + memory-tier dispatch.
+
+Each operator is a pure jnp function; ``apply_vocab``/``dense_transform``
+optionally dispatch to the Pallas kernels (kernels/vocab,
+kernels/dense_xform) following the paper's SRAM-vs-HBM placement policy.
+``Decode`` and ``FillMissing`` live in kernels/decode_utf8 (FillMissing is
+folded into Decode, as on the FPGA). ``Hex2Int`` needs no explicit op —
+the decoder already produces integers, mirroring the paper's observation
+that "the FPGA handles bits directly".
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import vocab as vocab_lib
+
+
+def positive_modulus(sparse: jnp.ndarray, vocab_range: int) -> jnp.ndarray:
+    """Modulus: map unsigned 32-bit hashes into [0, vocab_range).
+
+    The decoder stores hashes as int32 bitcasts; the modulus is defined on
+    the uint32 value (sparse features "are always positive", paper §3.2).
+    """
+    u = jax.lax.bitcast_convert_type(sparse, jnp.uint32)
+    return (u % jnp.uint32(vocab_range)).astype(jnp.int32)
+
+
+def neg2zero(dense: jnp.ndarray) -> jnp.ndarray:
+    """Neg2Zero: clamp negative dense features to zero (ternary op)."""
+    return jnp.maximum(dense, 0)
+
+
+def logarithm(dense: jnp.ndarray) -> jnp.ndarray:
+    """Logarithm: log(x+1) on dense features."""
+    return jnp.log1p(dense.astype(jnp.float32))
+
+
+def dense_transform(dense: jnp.ndarray, use_kernel: bool = False) -> jnp.ndarray:
+    """Fused Neg2Zero + Logarithm (one VMEM pass on TPU)."""
+    if use_kernel:
+        from repro.kernels.dense_xform import ops as dx_ops
+
+        return dx_ops.dense_transform(dense)
+    return logarithm(neg2zero(dense.astype(jnp.float32)))
+
+
+def apply_vocab(
+    vocab: vocab_lib.Vocabulary, modded: jnp.ndarray, use_kernel: bool = False
+) -> jnp.ndarray:
+    """ApplyVocab-2 with memory-tier dispatch (paper §3.2 / §4.4.6).
+
+    VMEM tier (small tables): Pallas kernel holding per-column tables in
+    VMEM — the FPGA's on-chip-SRAM mode. HBM tier (large tables): XLA
+    gather against the HBM-resident table — the FPGA's HBM mode, where the
+    paper recovers II≈1 by interleaving columns across HBM channels; XLA's
+    batched gather provides the same many-outstanding-reads behaviour.
+    """
+    if use_kernel and vocab.vocab_range <= vocab_lib.VMEM_TIER_MAX:
+        from repro.kernels.vocab import ops as vocab_ops
+
+        return vocab_ops.apply_vocab_vmem(vocab.table, modded)
+    return vocab_lib.lookup(vocab, modded)
+
+
+def concatenate(parts: list[jnp.ndarray], axis: int = 0) -> jnp.ndarray:
+    """Concatenate: merge results (trivially row-ordered on device)."""
+    return jnp.concatenate(parts, axis=axis)

@@ -1,0 +1,128 @@
+"""Two-loop columnar vocabulary engine (GenVocab / ApplyVocab).
+
+PIPER's stateful core: loop 1 streams the dataset and builds, per sparse
+column, the table mapping hashed value → *appearing-sequence* ordinal
+(GenVocab-1 + ApplyVocab-1 in the paper); loop 2 re-streams the dataset
+and maps every feature through the table (GenVocab-2 + ApplyVocab-2).
+
+TPU-native formulation
+----------------------
+The FPGA builds the table serially (II=2) with a BRAM bitmap + counter.
+That algorithm is order-dependent; a parallel device needs an
+order-independent equivalent. We use **first-occurrence positions**:
+
+  loop 1:   first_pos[c, v] = min over rows r of (global position of r)
+                              where modded[r, c] == v          (scatter-min)
+  finalize: ordinal[c, v]   = rank of first_pos[c, v] among present values
+                              (argsort — stable, so ties impossible:
+                               positions are unique)
+
+``ordinal`` is bit-identical to the serial appearing-sequence counter, but
+every step is a parallel primitive, and the state is **per-column** — the
+paper's synchronization-free property. When rows are additionally sharded
+over the ``data`` mesh axis, merging shards is a single elementwise
+``min`` reduction (vs. the CPU's sequential sub-dictionary merge).
+
+Memory tiers (paper §3.2, §4.4.6): the finalized table for vocab ≤
+``VMEM_TIER_MAX`` entries is gathered through the Pallas VMEM kernel
+("SRAM mode"); larger tables stay HBM-resident and use a plain XLA gather
+("HBM mode"). ``ops.apply_vocab`` makes the choice.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+# Sentinel for "value never seen". Must exceed any real position.
+NEVER = jnp.iinfo(jnp.int32).max
+# Entries (per column) that still fit the VMEM ("SRAM") tier comfortably:
+# 2 MiB of int32 per column table leaves room for double buffering.
+VMEM_TIER_MAX = 512 * 1024
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class VocabState:
+    """Loop-1 accumulator: first-occurrence position per (column, value)."""
+
+    first_pos: jnp.ndarray  # int32 [n_columns, vocab_range], NEVER = absent
+    rows_seen: jnp.ndarray  # int32 [] — global row counter (stream offset)
+
+    @classmethod
+    def init(cls, n_columns: int, vocab_range: int) -> "VocabState":
+        return cls(
+            first_pos=jnp.full((n_columns, vocab_range), NEVER, jnp.int32),
+            rows_seen=jnp.zeros((), jnp.int32),
+        )
+
+
+def update(state: VocabState, modded: jnp.ndarray, valid: jnp.ndarray) -> VocabState:
+    """Absorb one chunk (loop-1 step).
+
+    modded: int32 [rows, n_columns] already in [0, vocab_range)
+    valid:  bool  [rows]
+    """
+    rows = modded.shape[0]
+    pos = state.rows_seen + jnp.arange(rows, dtype=jnp.int32)
+    # Invalid (padding) rows scatter NEVER, which min() ignores.
+    pos = jnp.where(valid, pos, NEVER)
+    cols = jnp.arange(modded.shape[1], dtype=jnp.int32)[None, :]
+    first_pos = state.first_pos.at[
+        jnp.broadcast_to(cols, modded.shape), modded
+    ].min(jnp.broadcast_to(pos[:, None], modded.shape))
+    rows_seen = state.rows_seen + jnp.sum(valid.astype(jnp.int32))
+    return VocabState(first_pos=first_pos, rows_seen=rows_seen)
+
+
+def merge(a: VocabState, b: VocabState) -> VocabState:
+    """Merge states from disjoint row shards (one elementwise min)."""
+    return VocabState(
+        first_pos=jnp.minimum(a.first_pos, b.first_pos),
+        rows_seen=a.rows_seen + b.rows_seen,
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Vocabulary:
+    """Finalized tables: value → appearing-sequence ordinal."""
+
+    table: jnp.ndarray   # int32 [n_columns, vocab_range]
+    sizes: jnp.ndarray   # int32 [n_columns] — number of present values
+
+    @property
+    def vocab_range(self) -> int:
+        return int(self.table.shape[1])
+
+
+@functools.partial(jax.jit)
+def _finalize(first_pos: jnp.ndarray):
+    present = first_pos < NEVER
+    # Rank by first-occurrence position. argsort(argsort(x)) gives the rank;
+    # absent values (NEVER) rank behind every present one, and within absent
+    # ties the rank is arbitrary but they are masked to 0 below.
+    order = jnp.argsort(first_pos, axis=1, stable=True)
+    ranks = jnp.argsort(order, axis=1, stable=True)
+    table = jnp.where(present, ranks, 0).astype(jnp.int32)
+    sizes = jnp.sum(present.astype(jnp.int32), axis=1)
+    return table, sizes
+
+
+def finalize(state: VocabState) -> Vocabulary:
+    table, sizes = _finalize(state.first_pos)
+    return Vocabulary(table=table, sizes=sizes)
+
+
+def lookup(vocab: Vocabulary, modded: jnp.ndarray) -> jnp.ndarray:
+    """Loop-2 mapping (ApplyVocab-2): gather ordinals for every feature.
+
+    modded: int32 [rows, n_columns] → int32 [rows, n_columns].
+    (Pure-jnp HBM-tier path; the VMEM-tier Pallas kernel lives in
+    kernels/vocab and is selected by ``core.ops.apply_vocab``.)
+    """
+    cols = jnp.arange(modded.shape[1], dtype=jnp.int32)[None, :]
+    return vocab.table[jnp.broadcast_to(cols, modded.shape), modded]

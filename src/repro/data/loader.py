@@ -1,0 +1,123 @@
+"""Host data loading: deterministic batches, prefetch, shard distribution.
+
+Two producers:
+  * ``TokenBatches`` — deterministic synthetic LM token batches: batch for
+    step *i* is a pure function of (seed, i) → fault-tolerant skip-ahead
+    resume without replay (trainer contract).
+  * ``TabularChunkFeed`` — row-framed byte chunks for the PIPER engine,
+    assigning chunks round-robin to row shards with global row offsets
+    (the network-attached streaming layout: each row shard is one
+    "socket" of the disaggregated preprocessing service).
+
+``Prefetcher`` overlaps host batch production with device compute — the
+paper's pipelined LoadData stage at the framework level.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator
+
+import numpy as np
+
+from repro.core import schema as schema_lib
+
+
+class TokenBatches:
+    def __init__(self, vocab_size: int, batch: int, seq: int, seed: int = 0):
+        self.vocab_size = vocab_size
+        self.batch = batch
+        self.seq = seq
+        self.seed = seed
+
+    def __call__(self, step: int) -> dict:
+        rng = np.random.default_rng((self.seed, step))
+        return {
+            "tokens": rng.integers(
+                0, self.vocab_size, size=(self.batch, self.seq), dtype=np.int32
+            )
+        }
+
+
+class PiperTokenBatches:
+    """LM batches drawn from PIPER-preprocessed tabular data.
+
+    Rows become fixed-length token windows: the vocabulary-encoded sparse
+    ordinals of consecutive rows are concatenated into a token stream
+    (ordinal space == LM vocab ids). The preprocessing → training handoff
+    the paper's Figure 2 shows, for the LM architectures.
+    """
+
+    def __init__(self, processed_sparse: np.ndarray, vocab_size: int, batch: int, seq: int):
+        stream = processed_sparse.reshape(-1).astype(np.int64) % vocab_size
+        self.stream = stream.astype(np.int32)
+        self.batch = batch
+        self.seq = seq
+
+    def __call__(self, step: int) -> dict:
+        n = self.batch * self.seq
+        start = (step * n) % max(len(self.stream) - n, 1)
+        window = self.stream[start : start + n]
+        if len(window) < n:
+            window = np.pad(window, (0, n - len(window)), mode="wrap")
+        return {"tokens": window.reshape(self.batch, self.seq)}
+
+
+class TabularChunkFeed:
+    """Distribute row-framed byte chunks across row shards with offsets."""
+
+    def __init__(self, buf: np.ndarray, chunk_bytes: int, n_row_shards: int):
+        from repro.data import synth
+
+        chunks = list(synth.chunk_stream(buf, chunk_bytes))
+        rows_per = [int((c == schema_lib.NEWLINE).sum()) for c in chunks]
+        offsets = np.cumsum([0] + rows_per[:-1]).astype(np.int32)
+        d = n_row_shards
+        n_steps = (len(chunks) + d - 1) // d
+        pad = n_steps * d - len(chunks)
+        chunks += [np.zeros(chunk_bytes, np.uint8)] * pad
+        offsets = np.concatenate([offsets, np.zeros(pad, np.int32)])
+        self.stacked = np.stack(chunks).reshape(n_steps, d, chunk_bytes)
+        self.offsets = offsets.reshape(n_steps, d)
+        self.n_steps = n_steps
+
+    def __iter__(self) -> Iterator[tuple[np.ndarray, np.ndarray]]:
+        for i in range(self.n_steps):
+            yield self.stacked[i], self.offsets[i]
+
+
+class Prefetcher:
+    """Background-thread prefetch queue over any step-indexed batch_fn."""
+
+    def __init__(self, batch_fn: Callable[[int], dict], depth: int = 2):
+        self.batch_fn = batch_fn
+        self.depth = depth
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._next_step = 0
+        self._thread: threading.Thread | None = None
+
+    def start(self, start_step: int = 0):
+        self._next_step = start_step
+
+        def _producer():
+            step = start_step
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, self.batch_fn(step)), timeout=0.1)
+                    step += 1
+                except queue.Full:
+                    continue
+
+        self._thread = threading.Thread(target=_producer, daemon=True)
+        self._thread.start()
+        return self
+
+    def get(self) -> tuple[int, dict]:
+        return self._q.get()
+
+    def stop(self):
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=1.0)

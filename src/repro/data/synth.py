@@ -1,0 +1,134 @@
+"""Synthetic Criteo-format dataset generation (host side, numpy).
+
+The paper evaluates on the Criteo Kaggle dataset: rows of
+``label \\t 13 signed decimal ints \\t 26 hex hashes \\n`` in UTF-8, with
+empty fields allowed. We generate statistically similar synthetic data:
+
+  * label ∈ {0, 1}
+  * dense features: mostly small non-negative ints, some negatives (so
+    Neg2Zero has work), heavy-tailed magnitudes (so Logarithm has work),
+    ~5% empty
+  * sparse features: 8-hex-digit hashes drawn from per-column Zipf-ish
+    pools (so GenVocab sees realistic unique/duplicate mixes), ~3% empty
+
+Both the UTF-8 encoding and the pre-decoded "binary" representation
+(the paper's Config III input) are produced, plus chunked streaming.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import schema as schema_lib
+
+
+@dataclasses.dataclass
+class SynthConfig:
+    schema: schema_lib.TableSchema = schema_lib.CRITEO
+    rows: int = 4096
+    seed: int = 0
+    # Per-column pool of distinct hash values; controls vocabulary pressure.
+    sparse_pool: int = 1 << 14
+    dense_scale: float = 300.0
+    p_empty_dense: float = 0.05
+    p_empty_sparse: float = 0.03
+    p_negative: float = 0.15
+
+
+def generate_binary(cfg: SynthConfig) -> dict[str, np.ndarray]:
+    """Pre-decoded binary columns (the ground-truth table).
+
+    Returns int32 arrays: label [R], dense [R, n_dense] (signed; empties are
+    0), sparse [R, n_sparse] (int32 bitcast of the uint32 hash; empties 0).
+    """
+    rng = np.random.default_rng(cfg.seed)
+    sch = cfg.schema
+    r = cfg.rows
+
+    label = rng.integers(0, 2, size=r, dtype=np.int32)
+
+    mag = rng.exponential(cfg.dense_scale, size=(r, sch.n_dense))
+    dense = mag.astype(np.int64)
+    neg = rng.random((r, sch.n_dense)) < cfg.p_negative
+    dense = np.where(neg, -dense, dense)
+    dense_empty = rng.random((r, sch.n_dense)) < cfg.p_empty_dense
+    dense = np.where(dense_empty, 0, dense).astype(np.int32)
+
+    # Per-column hash pools: column c draws from pool hashes[c, :pool].
+    pool = rng.integers(0, 1 << 32, size=(sch.n_sparse, cfg.sparse_pool), dtype=np.uint64)
+    idx = np.minimum(
+        rng.zipf(1.3, size=(r, sch.n_sparse)) - 1, cfg.sparse_pool - 1
+    ).astype(np.int64)
+    sparse_u32 = pool[np.arange(sch.n_sparse)[None, :], idx].astype(np.uint32)
+    sparse_empty = rng.random((r, sch.n_sparse)) < cfg.p_empty_sparse
+    sparse_u32 = np.where(sparse_empty, np.uint32(0), sparse_u32)
+    sparse = sparse_u32.view(np.int32)
+
+    return {
+        "label": label,
+        "dense": dense,
+        "sparse": sparse,
+        "dense_empty": dense_empty,
+        "sparse_empty": sparse_empty,
+    }
+
+
+def encode_utf8(table: dict[str, np.ndarray], cfg: SynthConfig) -> bytes:
+    """Encode the binary table to the paper's UTF-8 wire format."""
+    sch = cfg.schema
+    out = []
+    label = table["label"]
+    dense = table["dense"]
+    sparse = table["sparse"].view(np.uint32)
+    de, se = table["dense_empty"], table["sparse_empty"]
+    for i in range(label.shape[0]):
+        parts = [str(int(label[i]))]
+        for j in range(sch.n_dense):
+            parts.append("" if de[i, j] else str(int(dense[i, j])))
+        for j in range(sch.n_sparse):
+            parts.append("" if se[i, j] else format(int(sparse[i, j]), "x"))
+        out.append("\t".join(parts))
+    return ("\n".join(out) + "\n").encode("utf-8")
+
+
+def pad_bytes(raw: bytes, multiple: int = 2048) -> np.ndarray:
+    """Zero-pad an encoded byte string to a block multiple (uint8 array)."""
+    n = len(raw)
+    padded = n + (-n) % multiple
+    buf = np.zeros(padded, dtype=np.uint8)
+    buf[:n] = np.frombuffer(raw, dtype=np.uint8)
+    return buf
+
+
+def make_dataset(cfg: SynthConfig):
+    """(utf8 uint8 buffer, binary table) pair for tests/benchmarks."""
+    table = generate_binary(cfg)
+    raw = encode_utf8(table, cfg)
+    return pad_bytes(raw), table
+
+
+def chunk_stream(buf: np.ndarray, chunk_bytes: int):
+    """Split a padded byte buffer into row-aligned chunks for streaming.
+
+    Chunks are split at the last newline ≤ chunk boundary so every chunk
+    holds whole rows (the network-attached PIPER receives row-framed
+    packets the same way). Each yielded chunk is zero-padded to
+    ``chunk_bytes``.
+    """
+    newline_pos = np.flatnonzero(buf == schema_lib.NEWLINE)
+    start = 0
+    end_of_data = int(newline_pos[-1]) + 1 if newline_pos.size else 0
+    while start < end_of_data:
+        hard_end = min(start + chunk_bytes, end_of_data)
+        cut = newline_pos[(newline_pos >= start) & (newline_pos < hard_end)]
+        if cut.size == 0:
+            raise ValueError(
+                f"row longer than chunk_bytes={chunk_bytes}; raise chunk size"
+            )
+        end = int(cut[-1]) + 1
+        chunk = np.zeros(chunk_bytes, dtype=np.uint8)
+        chunk[: end - start] = buf[start:end]
+        yield chunk
+        start = end

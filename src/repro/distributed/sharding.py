@@ -1,0 +1,254 @@
+"""Sharding rules: parameter/activation/cache PartitionSpecs.
+
+The strategy is FSDP(+pod) × TP(+EP), Megatron-style:
+
+  * column-parallel projections (wq/wk/wv, gate/up, in_proj, w_x):
+    output dim → ``model``; input dim → FSDP over ``('pod','data')``
+  * row-parallel projections (wo, down, out_proj): input dim → ``model``,
+    output dim → FSDP
+  * embeddings: vocab → ``model``, d_model → FSDP (so optimizer state for
+    a 256k×12288 table is never replicated)
+  * MoE experts: expert dim → ``model`` (EP — the PIPER "state local to
+    its shard" layout applied to experts); inner dims FSDP where legal
+  * SSM channel dims (d_inner) → ``model``: recurrent state stays local
+    to its channel shard, the columnar-state idea a third time
+  * everything 1D (norm scales, biases of row-parallel layers): replicated
+
+Rules match on path *suffixes* of the param tree and give the spec of the
+TRAILING dims; leading dims (the stacked n_superblocks axis) are padded
+with None automatically. The same engine produces optimizer-state specs
+(identical to params) and KV-cache/state specs.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+
+Params = Any
+
+# suffix → trailing-dims spec (FSDP placeholder "F" resolved per mesh)
+_RULES: list[tuple[tuple[str, ...], tuple[Any, ...]]] = [
+    # embeddings / heads
+    (("embed",), ("model", "F")),
+    (("pos_embed",), (None, "F")),
+    (("lm_head", "w"), ("F", "model")),
+    (("lm_head", "b"), ("model",)),
+    # attention (column-parallel qkv, row-parallel o)
+    (("attn", "wq", "w"), ("F", "model")),
+    (("attn", "wk", "w"), ("F", "model")),
+    (("attn", "wv", "w"), ("F", "model")),
+    (("attn", "wq", "b"), ("model",)),
+    (("attn", "wk", "b"), ("model",)),
+    (("attn", "wv", "b"), ("model",)),
+    (("attn", "wo", "w"), ("model", "F")),
+    (("attn", "wo", "b"), (None,)),
+    # dense MLP
+    (("mlp", "gate", "w"), ("F", "model")),
+    (("mlp", "up", "w"), ("F", "model")),
+    (("mlp", "down", "w"), ("model", "F")),
+    (("mlp", "gate", "b"), ("model",)),
+    (("mlp", "up", "b"), ("model",)),
+    (("mlp", "down", "b"), (None,)),
+    # MoE (expert-parallel)
+    (("mlp", "w_gate"), ("model", "F", None)),
+    (("mlp", "w_up"), ("model", "F", None)),
+    (("mlp", "w_down"), ("model", None, "F")),
+    (("mlp", "router", "w"), ("F", None)),
+    (("mlp", "shared", "gate", "w"), ("F", "model")),
+    (("mlp", "shared", "up", "w"), ("F", "model")),
+    (("mlp", "shared", "down", "w"), ("model", "F")),
+    # mamba
+    (("mamba", "in_proj", "w"), ("F", "model")),
+    (("mamba", "out_proj", "w"), ("model", "F")),
+    (("mamba", "w_bcdt", "w"), ("model", None)),
+    (("mamba", "dt_bias"), ("model",)),
+    (("mamba", "a_log"), ("model", None)),
+    (("mamba", "d_skip"), ("model",)),
+    # mLSTM / sLSTM
+    (("mlstm", "wq", "w"), ("F", "model")),
+    (("mlstm", "wk", "w"), ("F", "model")),
+    (("mlstm", "wv", "w"), ("F", "model")),
+    (("mlstm", "wo", "w"), ("model", "F")),
+    (("mlstm", "w_gates", "w"), ("F", None)),
+    (("slstm", "w_x", "w"), ("F", "model")),
+    (("slstm", "wo", "w"), ("model", "F")),
+    (("slstm", "r_h"), (None, None, None)),
+    # DLRM: per-table (columnar) sharding — matches the vocab engine
+    (("tables",), ("model", None, "F")),
+]
+
+
+def _path_names(path) -> tuple[str, ...]:
+    out = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            out.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            out.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            out.append(p.name)
+    return tuple(out)
+
+
+def _match(names: tuple[str, ...], suffix: tuple[str, ...]) -> bool:
+    """suffix must appear as a subsequence-aligned tail-or-infix of names
+    (block paths carry list indices between the matched names)."""
+    filtered = tuple(n for n in names if not n.isdigit())
+    return filtered[-len(suffix):] == suffix if len(filtered) >= len(suffix) else False
+
+
+def spec_for_path(path, leaf, mesh: Mesh) -> P:
+    names = _path_names(path)
+    fsdp = data_axes(mesh)
+    rank = leaf.ndim if hasattr(leaf, "ndim") else len(leaf.shape)
+    for suffix, trailing in _RULES:
+        if _match(names, suffix):
+            spec = [None] * (rank - len(trailing)) + [
+                fsdp if t == "F" else t for t in trailing
+            ]
+            # drop axes that don't divide the dim evenly → replicate them
+            spec = _legalize(spec, leaf.shape, mesh)
+            return P(*spec)
+    return P()  # replicate by default (norm scales, small vectors)
+
+
+def _axis_size(axis, mesh: Mesh) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def _legalize(spec: list, shape: tuple[int, ...], mesh: Mesh) -> list:
+    out = []
+    for dim, axis in zip(shape, spec):
+        n = _axis_size(axis, mesh)
+        out.append(axis if n > 1 and dim % n == 0 else None)
+    return out
+
+
+def param_shardings(params: Params, mesh: Mesh) -> Params:
+    """Tree of NamedShardings matching ``params`` (works on ShapeDtypeStructs)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, spec_for_path(path, leaf, mesh)),
+        params,
+    )
+
+
+def batch_spec(mesh: Mesh, rank: int = 2) -> P:
+    """tokens [GB, S] / token [GB]: batch over ('pod','data')."""
+    return P(data_axes(mesh), *([None] * (rank - 1)))
+
+
+def activation_spec(mesh: Mesh, sequence_parallel: bool = False) -> P:
+    """[B, S, d] constraint used inside model code (SP shards S over model)."""
+    if sequence_parallel:
+        return P(data_axes(mesh), "model", None)
+    return P(data_axes(mesh), None, None)
+
+
+def cache_shardings(state: Params, mesh: Mesh) -> Params:
+    """Decode-state shardings: [n_sb, B, heads/channels, seq, head_dim].
+
+    Batch dim (axis 1) → data axes. The ``model`` axis goes to the first
+    inner dim it divides evenly: heads/channels (axis 2) preferred, else
+    the sequence axis (axis 3) — KV-sequence sharding, the standard
+    long-context-decode layout when head counts don't divide the TP
+    degree (e.g. MQA / whisper's 12 heads on a 16-way axis). ``slot_pos``
+    rings ([n_sb, W]) replicate.
+    """
+    dp = data_axes(mesh)
+    msize = mesh.shape["model"]
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        rank = leaf.ndim
+        if names and names[-1] == "slot_pos":
+            return NamedSharding(mesh, P())
+        s: list = [None] * rank
+        if rank >= 2:
+            s[1] = dp
+        # place 'model' on the first inner axis it divides
+        for axis in range(2, rank):
+            if leaf.shape[axis] % msize == 0:
+                s[axis] = "model"
+                break
+        return NamedSharding(mesh, P(*_legalize(s, leaf.shape, mesh)))
+
+    return jax.tree_util.tree_map_with_path(spec, state)
+
+
+def logits_spec(mesh: Mesh) -> P:
+    return P(data_axes(mesh), None, "model")
+
+
+# --------------------------------------------------------------------- #
+# activation-constraint context (MaxText-style explicit intermediates)
+#
+# GSPMD's propagation through scan bodies can legally settle on layouts
+# that drop the batch sharding of activations (observed: unsharded-batch
+# f32 MLP hiddens dominating HBM in the dry-run). Models therefore call
+# ``constrain(x, kind)`` at the canonical points; it no-ops unless a mesh
+# context is active, keeping model code mesh-agnostic.
+# --------------------------------------------------------------------- #
+import contextlib
+import contextvars
+
+_MESH_CTX: contextvars.ContextVar[Mesh | None] = contextvars.ContextVar(
+    "repro_mesh", default=None
+)
+_SP_CTX: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "repro_sequence_parallel", default=False
+)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, sequence_parallel: bool = False):
+    t1 = _MESH_CTX.set(mesh)
+    t2 = _SP_CTX.set(sequence_parallel)
+    try:
+        yield
+    finally:
+        _MESH_CTX.reset(t1)
+        _SP_CTX.reset(t2)
+
+
+def current_mesh() -> Mesh | None:
+    """The active use_mesh() context (None in single-device tests)."""
+    return _MESH_CTX.get()
+
+
+def constrain(x, kind: str):
+    """Apply the canonical sharding constraint for an intermediate.
+
+    kinds: 'act' [B,S,d] · 'ffn' [B,S,ff] · 'heads' [B,H,S,D] ·
+    'experts' [E,C,d] · 'logits' [B,S,V] · 'batch' [B,...]
+    """
+    mesh = _MESH_CTX.get()
+    if mesh is None:
+        return x
+    dp = data_axes(mesh)
+    sp = _SP_CTX.get()
+    seq = "model" if sp else None
+    specs = {
+        # SP shards only the residual-stream sequence dim; TP regions
+        # (ffn/heads/logits) shard their own inner dim over 'model'
+        "act": [dp, seq, None],
+        "ffn": [dp, None, "model"],
+        "heads": [dp, "model", None, None],
+        "experts": ["model", None, None],
+        "logits": [dp, None, "model"],
+        "batch": [dp] + [None] * (x.ndim - 1),
+    }
+    spec = specs[kind][: x.ndim]
+    spec = _legalize(spec, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

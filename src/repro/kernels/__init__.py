@@ -1,0 +1,5 @@
+# Pallas TPU kernels for the compute hot-spots PIPER optimizes in hardware,
+# plus the model-side attention kernel. One subpackage per kernel, each with
+#   kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling
+#   ops.py    — jit'd public wrapper (tier/strategy selection, fallbacks)
+#   ref.py    — pure-jnp oracle

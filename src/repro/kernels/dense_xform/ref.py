@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused dense-feature transform."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def dense_transform(dense: jnp.ndarray) -> jnp.ndarray:
+    """FillMissing(0 default) ∘ Neg2Zero ∘ Logarithm, fused.
+
+    dense int32/float [rows, n_dense] → float32 log1p(max(x, 0)).
+    """
+    x = dense.astype(jnp.float32)
+    return jnp.log1p(jnp.maximum(x, 0.0))

@@ -1,0 +1,48 @@
+"""Pallas TPU kernel: DLRM embedding gather (PE-per-column layout).
+
+The training-side continuation of ApplyVocab: vocabulary ordinals index
+per-column embedding tables. Same tiering as the vocab kernels — one
+column's table per grid row, held in VMEM while a batch block gathers
+from it (the paper's SRAM tier; HBM-tier tables fall back to XLA gather
+in ops.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gather_kernel(table_ref, ids_ref, out_ref):
+    # table_ref f32 [1, vocab, dim]; ids_ref int32 [1, BB]; out [1, BB, dim]
+    out_ref[...] = jnp.take(table_ref[0], ids_ref[0], axis=0)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("batch_block", "interpret"))
+def embedding_gather(
+    tables: jnp.ndarray,
+    ids_t: jnp.ndarray,
+    *,
+    batch_block: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """tables [n_cols, vocab, dim]; ids_t [n_cols, batch] → [n_cols, batch, dim]."""
+    n_cols, vocab, dim = tables.shape
+    batch = ids_t.shape[1]
+    bb = min(batch_block, batch)
+    if batch % bb:
+        raise ValueError(f"batch ({batch}) must divide batch_block ({bb})")
+    return pl.pallas_call(
+        _gather_kernel,
+        grid=(n_cols, batch // bb),
+        in_specs=[
+            pl.BlockSpec((1, vocab, dim), lambda c, b: (c, 0, 0)),
+            pl.BlockSpec((1, bb), lambda c, b: (c, b)),
+        ],
+        out_specs=pl.BlockSpec((1, bb, dim), lambda c, b: (c, b, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_cols, batch, dim), tables.dtype),
+        interpret=interpret,
+    )(tables, ids_t)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the DLRM per-column embedding gather."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def embedding_gather(tables: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """tables f32 [n_cols, vocab, dim]; ids int32 [batch, n_cols].
+
+    → f32 [batch, n_cols, dim] — one embedding row per (row, column),
+    which is the Criteo one-hot case of embedding-bag.
+    """
+    cols = jnp.arange(tables.shape[0])[None, :]
+    return tables[jnp.broadcast_to(cols, ids.shape), ids]

@@ -1,0 +1,140 @@
+"""Pallas TPU kernel: blockwise online-softmax (flash) attention.
+
+The model-side hot spot of every assigned architecture's train/prefill
+step. Canonical TPU tiling: grid = (batch·q_heads, q blocks, kv blocks)
+with the kv axis innermost/sequential; running (max, sum, acc) in VMEM
+scratch across kv steps; MXU-aligned 128×128 blocks; f32 accumulation.
+
+GQA/MQA is handled in the BlockSpec index maps: the kv block loaded for
+query head ``h`` is head ``h // group`` of the kv tensor — no repeated
+kv materialization (the jnp oracle materializes the repeat instead).
+
+Causal masking skips fully-masked kv blocks via ``pl.when`` (upper
+triangle contributes no FLOPs, halving the compute term for train/prefill
+— this is the paper-style "only optimize the critical PE" point applied
+to the model side).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *, causal: bool, scale: float
+):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+    bq = q_ref.shape[1]
+    bk = k_ref.shape[1]
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # [BQ, D]
+        k = k_ref[0].astype(jnp.float32)                  # [BK, D]
+        v = v_ref[0].astype(jnp.float32)                  # [BK, D]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )                                                  # [BQ, BK]
+        if causal:
+            qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+
+        m_prev = m_ref[...]                                # [BQ, 128]
+        m_cur = jnp.max(s, axis=1, keepdims=True)          # [BQ, 1]
+        m_new = jnp.maximum(m_prev, jnp.broadcast_to(m_cur, m_prev.shape))
+        alpha = jnp.exp(m_prev - m_new)                    # [BQ, 128]
+        p = jnp.exp(s - m_new[:, :1])                      # [BQ, BK]
+        l_ref[...] = l_ref[...] * alpha + jnp.broadcast_to(
+            jnp.sum(p, axis=1, keepdims=True), m_prev.shape
+        )
+        acc_ref[...] = acc_ref[...] * alpha[:, :1] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    if causal:
+        # Skip kv blocks strictly above this q block's diagonal.
+        pl.when(ik * bk <= iq * bq + bq - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / l_ref[:, :1]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """q [B, Hq, Sq, D]; k/v [B, Hkv, Skv, D]; Hq % Hkv == 0. → [B, Hq, Sq, D].
+
+    Sq/Skv must divide by the block sizes (callers pad); D should be a
+    multiple of 128 for MXU alignment (not enforced — interpret mode and
+    the oracle accept any D).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    if hq % hkv:
+        raise ValueError(f"Hq={hq} not a multiple of Hkv={hkv}")
+    group = hq // hkv
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    if sq % bq or skv % bk:
+        raise ValueError(f"seq lens ({sq},{skv}) must divide blocks ({bq},{bk})")
+
+    q3 = q.reshape(b * hq, sq, d)
+    k3 = k.reshape(b * hkv, skv, d)
+    v3 = v.reshape(b * hkv, skv, d)
+
+    def kv_index(h, iq_, ik_):
+        # query head h of batch h//hq maps to kv head (h%hq)//group
+        return ((h // hq) * hkv + (h % hq) // group, ik_, 0)
+
+    scale = float(1.0 / (d ** 0.5))
+    kernel = functools.partial(_flash_kernel, causal=causal, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hq, sq // bq, skv // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, iq_, ik_: (h, iq_, 0)),
+            pl.BlockSpec((1, bk, d), kv_index),
+            pl.BlockSpec((1, bk, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, iq_, ik_: (h, iq_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q3, k3, v3)
+    return out.reshape(b, hq, sq, d)

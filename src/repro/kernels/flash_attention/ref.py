@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for blockwise (flash) attention."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def mha(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+) -> jnp.ndarray:
+    """Multi-head attention with optional causal mask; GQA via head groups.
+
+    q [B, Hq, Sq, D]; k/v [B, Hkv, Skv, D] with Hq % Hkv == 0.
+    Computed in float32 regardless of input dtype (matches the kernel's
+    f32 accumulators); returns q.dtype.
+    """
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    qf = q.astype(jnp.float32)
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) / jnp.sqrt(d).astype(jnp.float32)
+    if causal:
+        skv = k.shape[2]
+        qpos = jnp.arange(sq)[:, None] + (skv - sq)  # right-aligned queries
+        kpos = jnp.arange(skv)[None, :]
+        logits = jnp.where(qpos >= kpos, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vf)
+    return out.astype(q.dtype)

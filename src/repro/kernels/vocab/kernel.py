@@ -1,0 +1,109 @@
+"""Pallas TPU kernels for the stateful vocabulary stage (PIPER §3.2).
+
+Two kernels, both laid out *one column per grid row* — the direct TPU
+analogue of PIPER's PE-per-column design (state private to its column,
+zero synchronization):
+
+``apply_vocab_kernel`` (ApplyVocab-2, "SRAM mode"): the whole per-column
+table tile sits in VMEM (the paper's on-chip-SRAM tier; ≤2 MiB/column at
+the VMEM-tier cutoff) and every input feature is a VMEM gather — the
+FPGA's II=2 random read becomes a vectorized lane gather.
+
+``genvocab_kernel`` (GenVocab-1 + ApplyVocab-1): builds the
+first-occurrence table with a serial read-modify-write loop at dynamic
+indices — the literal II=2 BRAM update loop of the FPGA, kept serial
+*within* a column because two equal hashes in the same chunk must
+min-combine (the vectorized jnp fallback in ops.py uses XLA's scatter-min
+for the HBM tier instead). State is carried across row-chunks via
+``input_output_aliases`` (in-place accumulation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------------- #
+# ApplyVocab-2: VMEM-tier gather
+# ---------------------------------------------------------------------- #
+def _apply_vocab_kernel(table_ref, vals_ref, out_ref):
+    # table_ref: int32 [1, vocab_range] — this column's full table in VMEM
+    # vals_ref:  int32 [1, R_BLK]
+    out_ref[...] = jnp.take(table_ref[0], vals_ref[0], axis=0)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("row_block", "interpret"))
+def apply_vocab(
+    table: jnp.ndarray,
+    vals_t: jnp.ndarray,
+    *,
+    row_block: int = 1024,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """table [n_cols, vocab_range]; vals_t [n_cols, rows] → ids [n_cols, rows]."""
+    n_cols, vocab_range = table.shape
+    rows = vals_t.shape[1]
+    if rows % row_block:
+        raise ValueError(f"rows ({rows}) must divide by row_block ({row_block})")
+    return pl.pallas_call(
+        _apply_vocab_kernel,
+        grid=(n_cols, rows // row_block),
+        in_specs=[
+            pl.BlockSpec((1, vocab_range), lambda c, r: (c, 0)),
+            pl.BlockSpec((1, row_block), lambda c, r: (c, r)),
+        ],
+        out_specs=pl.BlockSpec((1, row_block), lambda c, r: (c, r)),
+        out_shape=jax.ShapeDtypeStruct((n_cols, rows), jnp.int32),
+        interpret=interpret,
+    )(table, vals_t)
+
+
+# ---------------------------------------------------------------------- #
+# GenVocab-1/ApplyVocab-1: first-occurrence scatter-min
+# ---------------------------------------------------------------------- #
+def _genvocab_kernel(vals_ref, pos_ref, state_in_ref, state_ref):
+    # state alias: state_ref starts as state_in_ref's contents (same buffer).
+    rows = vals_ref.shape[1]
+
+    def body(i, _):
+        v = vals_ref[0, i]
+        p = pos_ref[0, i]
+        cur = state_ref[0, v]
+        state_ref[0, v] = jnp.minimum(cur, p)  # the FPGA's II=2 RMW update
+        return 0
+
+    jax.lax.fori_loop(0, rows, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
+def genvocab(
+    state: jnp.ndarray,
+    vals_t: jnp.ndarray,
+    pos: jnp.ndarray,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Update first-occurrence tables for one row chunk.
+
+    state [n_cols, vocab_range]; vals_t [n_cols, rows]; pos [rows].
+    """
+    n_cols, vocab_range = state.shape
+    rows = vals_t.shape[1]
+    pos2d = jnp.broadcast_to(pos[None, :], (1, rows))
+    return pl.pallas_call(
+        _genvocab_kernel,
+        grid=(n_cols,),
+        in_specs=[
+            pl.BlockSpec((1, rows), lambda c: (c, 0)),
+            pl.BlockSpec((1, rows), lambda c: (0, 0)),
+            pl.BlockSpec((1, vocab_range), lambda c: (c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, vocab_range), lambda c: (c, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_cols, vocab_range), jnp.int32),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(vals_t, pos2d, state)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the vocabulary kernels.
+
+``apply_vocab``  — ApplyVocab-2: per-column table gather.
+``genvocab``     — GenVocab-1 + ApplyVocab-1 state update: scatter-min of
+                   first-occurrence positions.
+
+Both operate in the transposed [n_cols, rows] layout the kernels use
+(columns on the leading/grid axis — the PE-per-column layout).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def apply_vocab(table: jnp.ndarray, vals_t: jnp.ndarray) -> jnp.ndarray:
+    """table int32 [n_cols, vocab_range]; vals_t int32 [n_cols, rows]."""
+    return jnp.take_along_axis(table, vals_t, axis=1)
+
+
+@jax.jit
+def genvocab(
+    state: jnp.ndarray, vals_t: jnp.ndarray, pos: jnp.ndarray
+) -> jnp.ndarray:
+    """Scatter-min of positions into per-column first-occurrence tables.
+
+    state  int32 [n_cols, vocab_range]
+    vals_t int32 [n_cols, rows] — modded values
+    pos    int32 [rows]        — global row positions (NEVER for invalid)
+    """
+    n_cols = state.shape[0]
+    cols = jnp.arange(n_cols, dtype=jnp.int32)[:, None]
+    return state.at[
+        jnp.broadcast_to(cols, vals_t.shape), vals_t
+    ].min(jnp.broadcast_to(pos[None, :], vals_t.shape))

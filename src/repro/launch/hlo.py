@@ -1,0 +1,76 @@
+"""Post-optimization HLO introspection: collective-traffic accounting.
+
+``collective_bytes(compiled_text)`` sums the output operand sizes of
+every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute in the compiled module (async start/done pairs are
+counted once, on the start). This is the collective-roofline numerator —
+cost_analysis does not report it.
+
+Caveat handled by the caller (dryrun.py): collectives inside ``while``
+bodies (scan-over-layers) appear once in the text; the dry-run
+reconstructs full-depth totals by lowering at two depths and
+extrapolating the per-superblock delta.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import Counter
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+}
+
+# a collective instruction: "%name = <shape(s)> <op>(" — shapes may be a tuple
+_COLL_OPS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+_INSTR_RE = re.compile(
+    r"=\s*(\(?[a-z0-9_\[\]{},:\s]*\)?)\s*"
+    r"(all-reduce-start|all-reduce|all-gather-start|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)\("
+)
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+_SKIP_SUFFIX = ("-done",)
+
+
+def _shape_bytes(shape_text: str) -> float:
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-op-kind byte totals + instruction counts from compiled HLO."""
+    bytes_by_op: Counter = Counter()
+    count_by_op: Counter = Counter()
+    for m in _INSTR_RE.finditer(hlo_text):
+        shapes, op = m.group(1), m.group(2)
+        op = op.replace("-start", "")
+        b = _shape_bytes(shapes)
+        bytes_by_op[op] += b
+        count_by_op[op] += 1
+    return {
+        "bytes_by_op": dict(bytes_by_op),
+        "count_by_op": dict(count_by_op),
+        "total_bytes": float(sum(bytes_by_op.values())),
+    }
+
+
+def collective_bytes(hlo_text: str) -> float:
+    return collective_stats(hlo_text)["total_bytes"]

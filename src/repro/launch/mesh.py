@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Defined as a FUNCTION (never a module-level constant) so importing this
+module never touches jax device state — required by the dry-run, whose
+very first lines set ``XLA_FLAGS=--xla_force_host_platform_device_count=512``
+before any jax initialization.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single-pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh with Auto axis types (tests, benchmarks)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Axes that shard the batch: ('pod','data') when a pod axis exists."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

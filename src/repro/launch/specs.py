@@ -1,0 +1,289 @@
+"""Per-(arch × shape) runtime assembly for the dry-run and launchers.
+
+``build_cell(cfg, shape, mesh, ...)`` returns everything needed to lower
+one cell: the step function, allocation-free ShapeDtypeStruct arguments
+(weak-type-correct, shardable), and in/out shardings.
+
+No array is ever allocated here: params/optimizer/cache skeletons come
+from ``jax.eval_shape`` over the real init functions, then get their
+NamedShardings attached.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import shapes as shapes_lib
+from repro.distributed import sharding as shard_lib
+from repro.launch.mesh import data_axes
+from repro.models import lm as lm_lib
+from repro.models.common import ModelConfig
+from repro.train import optimizer as opt_lib
+from repro.train import steps as steps_lib
+
+# per-arch train knobs chosen to fit HBM at the production mesh (validated
+# by the dry-run's memory_analysis; see EXPERIMENTS.md §Dry-run)
+TRAIN_MICROBATCHES = {
+    "command-r-plus-104b": 8,
+    "llama-3.2-vision-90b": 16,
+    "kimi-k2-1t-a32b": 8,
+    "minitron-8b": 4,
+    "gemma-2b": 2,
+    "gemma-7b": 4,
+    "qwen2-moe-a2.7b": 2,
+    "hymba-1.5b": 2,
+    "xlstm-350m": 2,
+    "whisper-small": 2,
+}
+# memory-lean optimizer for the 1T-param MoE (full Adam state would not
+# fit 512×16 GB; Adafactor's factored second moment does)
+ADAFACTOR_ARCHS = {"kimi-k2-1t-a32b"}
+# sequence-parallel residual stream for the giant-d_model trains: the
+# remat-saved per-superblock carries (L × S × d bf16) exceed HBM without
+# it (§Perf iteration log in EXPERIMENTS.md)
+TRAIN_SEQUENCE_PARALLEL = {
+    "command-r-plus-104b",
+    "llama-3.2-vision-90b",
+    "kimi-k2-1t-a32b",
+}
+
+
+def build_model(
+    cfg: ModelConfig,
+    attn_impl: str = "chunked",
+    remat: bool = True,
+    attn_block_k: int = 1024,
+    ce_block: int = 512,
+    unroll: bool = False,
+):
+    cls = lm_lib.EncDec if cfg.family == "audio" else lm_lib.LM
+    return cls(
+        cfg,
+        remat=remat,
+        attn_impl=attn_impl,
+        attn_block_k=attn_block_k,
+        ce_block=ce_block,
+        unroll=unroll,
+    )
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _legal(mesh: Mesh, shape: tuple[int, ...], *spec) -> NamedSharding:
+    """NamedSharding with axes that don't divide evenly dropped (e.g.
+    global_batch=1 on a 16-way data axis for long_500k)."""
+    legal = shard_lib._legalize(list(spec), shape, mesh)
+    return NamedSharding(mesh, P(*legal))
+
+
+def batch_specs(cfg: ModelConfig, shape: shapes_lib.ShapeConfig, mesh: Mesh):
+    """ShapeDtypeStructs for the input batch of a train/prefill cell."""
+    dp = data_axes(mesh)
+    gb, seq = shape.global_batch, shape.seq_len
+    tok_sh = _legal(mesh, (gb, seq), dp, None)
+    batch = {"tokens": _sds((gb, seq), jnp.int32, tok_sh)}
+    if cfg.family == "audio":
+        shp = (gb, cfg.encoder_frames, cfg.d_model)
+        batch["frames"] = _sds(shp, jnp.float32, _legal(mesh, shp, dp, None, None))
+    if cfg.vision_tokens:
+        shp = (gb, cfg.vision_tokens, cfg.d_model)
+        batch["vision"] = _sds(shp, jnp.float32, _legal(mesh, shp, dp, None, None))
+    return batch
+
+
+@dataclasses.dataclass
+class Cell:
+    """One lowerable (arch × shape × mesh) combination."""
+
+    step_fn: Callable
+    args: tuple           # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: Any
+    kind: str
+    meta: dict
+
+
+def _attach(tree, shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree,
+        shardings,
+    )
+
+
+def _to_serving_dtype(params_sds):
+    """Serving checkpoints store weights in bf16 (halves HBM + FSDP
+    gathers); f32 leaves are cast, integer leaves untouched."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16, sharding=s.sharding)
+        if s.dtype == jnp.float32
+        else s,
+        params_sds,
+    )
+
+
+def _opt_shardings(opt_skeleton, params_shardings, mesh: Mesh):
+    """Adam m/v mirror param shardings; scalars/factored states replicate."""
+    repl = NamedSharding(mesh, P())
+
+    def build(sub):
+        if isinstance(sub, dict) and set(sub) >= {"m", "v"}:
+            return {
+                "m": params_shardings,
+                "v": params_shardings,
+                "step": repl,
+            }
+        return jax.tree.map(lambda _: repl, sub)
+
+    if isinstance(opt_skeleton, dict) and "m" in opt_skeleton:
+        return build(opt_skeleton)
+    return jax.tree.map(lambda _: repl, opt_skeleton)
+
+
+def build_cell(
+    cfg: ModelConfig,
+    shape: shapes_lib.ShapeConfig,
+    mesh: Mesh,
+    *,
+    microbatches: int | None = None,
+    remat: bool = True,
+    attn_block_k: int = 1024,
+    n_superblocks_override: int | None = None,
+    ce_block: int = 512,
+    unroll: bool = False,
+    sequence_parallel: bool = False,
+) -> Cell:
+    """Assemble the (step_fn, specs, shardings) for one cell."""
+    if n_superblocks_override is not None:
+        enc = (
+            dict(n_encoder_superblocks=n_superblocks_override)
+            if cfg.n_encoder_superblocks
+            else {}
+        )
+        cfg = dataclasses.replace(
+            cfg, n_superblocks=n_superblocks_override, **enc
+        )
+    model = build_model(
+        cfg,
+        remat=remat,
+        attn_block_k=attn_block_k,
+        ce_block=ce_block,
+        unroll=unroll,
+    )
+    params_skeleton = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    params_sh = shard_lib.param_shardings(params_skeleton, mesh)
+    params_sds = _attach(params_skeleton, params_sh)
+    dp = data_axes(mesh)
+    meta = {"arch": cfg.name, "shape": shape.name, "mesh": tuple(mesh.shape.values())}
+
+    if shape.kind == "train":
+        mb = microbatches or TRAIN_MICROBATCHES.get(cfg.name, 1)
+        opt_cfg = opt_lib.AdamWConfig(
+            schedule=opt_lib.cosine_schedule(3e-4, 100, 10_000)
+        )
+        if cfg.name in ADAFACTOR_ARCHS:
+            opt_init, train_step = _make_adafactor_step(model, mb)
+        else:
+            opt_init = opt_lib.adamw_init
+            train_step = steps_lib.make_train_step(model, opt_cfg, mb)
+        opt_skeleton = jax.eval_shape(opt_init, params_skeleton)
+        opt_sh = _opt_shardings(opt_skeleton, params_sh, mesh)
+        opt_sds = _attach(opt_skeleton, opt_sh)
+        batch = batch_specs(cfg, shape, mesh)
+        batch_sh = jax.tree.map(lambda s: s.sharding, batch)
+        return Cell(
+            step_fn=train_step,
+            args=(params_sds, opt_sds, batch),
+            in_shardings=(params_sh, opt_sh, batch_sh),
+            out_shardings=(params_sh, opt_sh, None),
+            kind="train",
+            meta={**meta, "microbatches": mb},
+        )
+
+    if shape.kind == "prefill":
+        # note: params stay f32 here — an experiment with bf16-at-rest
+        # REGRESSED temp 2× via GSPMD propagation (recorded in §Perf)
+        prefill = steps_lib.make_prefill_step(model)
+        batch = batch_specs(cfg, shape, mesh)
+        batch_sh = jax.tree.map(lambda s: s.sharding, batch)
+        out_sh = _legal(
+            mesh, (shape.global_batch, cfg.vocab_size), dp, "model"
+        )
+        return Cell(
+            step_fn=prefill,
+            args=(params_sds, batch),
+            in_shardings=(params_sh, batch_sh),
+            out_shardings=out_sh,
+            kind="prefill",
+            meta=meta,
+        )
+
+    # decode (params f32 at rest; the bf16-at-rest experiment is in §Perf)
+    serve = steps_lib.make_serve_step(model)
+    gb = shape.global_batch
+    state_skeleton = jax.eval_shape(
+        lambda: (model.decoder if cfg.family == "audio" else model).init_decode_state(
+            gb, cache_len=shape.seq_len
+        )
+    )
+    state_sh = shard_lib.cache_shardings(state_skeleton, mesh)
+    state_sds = _attach(state_skeleton, state_sh)
+    tok_sh = _legal(mesh, (gb,), dp)
+    repl = NamedSharding(mesh, P())
+    token = _sds((gb,), jnp.int32, tok_sh)
+    pos = _sds((), jnp.int32, repl)
+    out_logits_sh = _legal(mesh, (gb, cfg.vocab_size), dp, "model")
+    return Cell(
+        step_fn=serve,
+        args=(params_sds, state_sds, token, pos),
+        in_shardings=(params_sh, state_sh, tok_sh, repl),
+        out_shardings=(out_logits_sh, state_sh),
+        kind="decode",
+        meta=meta,
+    )
+
+
+def _make_adafactor_step(model, microbatches: int):
+    """Adafactor-variant train step (memory-lean; used for the 1T MoE)."""
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return steps_lib._model_loss(model, p, batch)
+
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+        else:
+            mbatch = jax.tree.map(
+                lambda x: x.reshape(
+                    (microbatches, x.shape[0] // microbatches) + x.shape[1:]
+                ),
+                batch,
+            )
+
+            def body(carry, micro):
+                acc, l = carry
+                loss, grads = jax.value_and_grad(
+                    lambda p: steps_lib._model_loss(model, p, micro)
+                )(params)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / microbatches, acc, grads
+                )
+                return (acc, l + loss / microbatches), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(
+                body, (zero, jnp.zeros((), jnp.float32)), mbatch
+            )
+        new_params, new_opt, _ = opt_lib.adafactor_update(
+            params, grads, opt_state, lr=1e-2
+        )
+        return new_params, new_opt, {"loss": loss}
+
+    return opt_lib.adafactor_init, train_step

@@ -1,0 +1,320 @@
+"""Attention layers: GQA/MQA, sliding-window, cross; prefill + decode.
+
+Three execution paths, one semantics (cross-validated in tests):
+
+  * ``attention_einsum``  — oracle; materializes scores (tests only).
+  * ``attention_chunked`` — production XLA path: online-softmax scan over
+    KV blocks (flash-attention dataflow at the XLA level). Never
+    materializes S×S — this is what train/prefill lower in the dry-run,
+    so ``memory_analysis()`` proves the 32k shapes actually fit.
+  * Pallas flash kernel (kernels/flash_attention) — TPU hot path,
+    numerically identical dataflow, selected by ``use_flash_kernel``.
+
+Decode steps use one-token einsum against the KV cache (no S² issue).
+Caches: ``full`` (dense [S_max] cache) or ``ring`` (sliding-window ring
+buffer of width W — O(W) memory for 500k-token decode, the sub-quadratic
+path of hymba).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import common
+from repro.models.common import ModelConfig, Params
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------- #
+# params
+# --------------------------------------------------------------------- #
+def init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    return {
+        "wq": common.dense_init(ks[0], d, cfg.q_dim, bias=cfg.use_qkv_bias),
+        "wk": common.dense_init(ks[1], d, cfg.kv_dim, bias=cfg.use_qkv_bias),
+        "wv": common.dense_init(ks[2], d, cfg.kv_dim, bias=cfg.use_qkv_bias),
+        "wo": common.dense_init(ks[3], cfg.q_dim, d),
+    }
+
+
+def _split_heads(x: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, -1).transpose(0, 2, 1, 3)  # [B,H,S,D]
+
+
+def _merge_heads(x: jnp.ndarray) -> jnp.ndarray:
+    b, h, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * d)
+
+
+# --------------------------------------------------------------------- #
+# core attention math
+# --------------------------------------------------------------------- #
+def attention_einsum(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool,
+    window: int | jnp.ndarray = 0,
+    q_offset: int | jnp.ndarray = 0,
+) -> jnp.ndarray:
+    """Oracle path. q [B,Hq,Sq,D], k/v [B,Hkv,Skv,D]."""
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, sq, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kf) / (d ** 0.5)
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((sq, k.shape[2]), bool)
+    if causal:
+        mask &= qpos >= kpos
+    mask = jnp.where(
+        jnp.asarray(window) > 0, mask & (qpos - kpos < jnp.maximum(window, 1)), mask
+    )
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def attention_chunked(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool,
+    window: int | jnp.ndarray = 0,
+    q_offset: int | jnp.ndarray = 0,
+    block_k: int = 1024,
+    block_q: int = 4096,
+) -> jnp.ndarray:
+    """Online-softmax over KV blocks (flash dataflow in XLA), scanned
+    over Q blocks as well: peak transient is O(block_q·block_k) — the
+    f32 (max, sum, acc) accumulators at 32k prefill were multi-GiB per
+    layer before Q blocking.
+    """
+    b, hq, sq, d = q.shape
+    if sq > block_q and sq % block_q == 0:
+        nq = sq // block_q
+        qb = q.reshape(b, hq, nq, block_q, d).transpose(2, 0, 1, 3, 4)
+
+        def qbody(carry, xs):
+            qblk, iq = xs
+            out = attention_chunked(
+                qblk, k, v,
+                causal=causal, window=window,
+                q_offset=q_offset + iq * block_q,
+                block_k=block_k, block_q=block_q,
+            )
+            return carry, out
+
+        _, outs = jax.lax.scan(qbody, (), (qb, jnp.arange(nq)))
+        return outs.transpose(1, 2, 0, 3, 4).reshape(b, hq, sq, d)
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    bk = min(block_k, skv)
+    pad = (-skv) % bk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nb = k.shape[2] // bk
+    kb = k.reshape(b, hkv, nb, bk, d).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, hkv, nb, bk, d).transpose(2, 0, 1, 3, 4)
+
+    qg = (q.reshape(b, hkv, group, sq, d) * (d ** -0.5)).astype(jnp.float32)
+    qpos = q_offset + jnp.arange(sq)[:, None]  # [Sq,1]
+    win = jnp.asarray(window)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kblk, vblk, iblk = xs
+        s = jnp.einsum(
+            "bhgqd,bhkd->bhgqk", qg, kblk.astype(jnp.float32)
+        )  # [B,Hkv,G,Sq,BK]
+        kpos = iblk * bk + jnp.arange(bk)[None, :]
+        mask = kpos < skv  # padding
+        if causal:
+            mask = mask & (qpos >= kpos)
+        mask = jnp.where(win > 0, mask & (qpos - kpos < jnp.maximum(win, 1)), mask)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None]) * mask[None, None, None]
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p, vblk.astype(jnp.float32)
+        )
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, hkv, group, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, group, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kb, vb, jnp.arange(nb))
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+# --------------------------------------------------------------------- #
+# full layers (projections + rope + attention)
+# --------------------------------------------------------------------- #
+def forward(
+    x: jnp.ndarray,
+    params: Params,
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+    window: int | jnp.ndarray = 0,
+    positions: jnp.ndarray | None = None,
+    use_rope: bool = True,
+    impl: str = "chunked",
+    use_flash_kernel: bool = False,
+    block_k: int = 1024,
+) -> jnp.ndarray:
+    """Self-attention over a full sequence (train / prefill)."""
+    b, s, _ = x.shape
+    q = constrain(_split_heads(common.dense(x, params["wq"]), cfg.n_heads), "heads")
+    k = constrain(_split_heads(common.dense(x, params["wk"]), cfg.n_kv_heads), "heads")
+    v = constrain(_split_heads(common.dense(x, params["wv"]), cfg.n_kv_heads), "heads")
+    if use_rope:
+        pos = positions if positions is not None else jnp.arange(s)
+        q = common.apply_rope(q, pos, cfg.rope_theta)
+        k = common.apply_rope(k, pos, cfg.rope_theta)
+    if use_flash_kernel:
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        out = fa_ops.attention(q, k, v, causal=causal, use_kernel=True)
+    elif impl == "einsum":
+        out = attention_einsum(q, k, v, causal=causal, window=window)
+    else:
+        # remat: the KV-scan backward would otherwise SAVE the per-block
+        # f32 probability tensors (observed: TBs cumulative on 4k train)
+        # — recomputing them is exactly flash-attention's backward.
+        fn = functools.partial(
+            attention_chunked, causal=causal, window=window, block_k=block_k
+        )
+        out = jax.checkpoint(fn, prevent_cse=False)(q, k, v)
+    return common.dense(_merge_heads(out), params["wo"])
+
+
+def cross_forward(
+    x: jnp.ndarray,
+    context_kv: tuple[jnp.ndarray, jnp.ndarray],
+    params: Params,
+    cfg: ModelConfig,
+) -> jnp.ndarray:
+    """Cross-attention against precomputed context K/V [B,Hkv,Sc,D]."""
+    q = _split_heads(common.dense(x, params["wq"]), cfg.n_heads)
+    k, v = context_kv
+    out = attention_chunked(q, k, v, causal=False)
+    return common.dense(_merge_heads(out), params["wo"])
+
+
+def context_kv(
+    context: jnp.ndarray, params: Params, cfg: ModelConfig
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Precompute cross-attention K/V from encoder/vision states."""
+    k = _split_heads(common.dense(context, params["wk"]), cfg.n_kv_heads)
+    v = _split_heads(common.dense(context, params["wv"]), cfg.n_kv_heads)
+    return k, v
+
+
+# --------------------------------------------------------------------- #
+# KV caches + decode step
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class CacheSpec:
+    kind: str      # "full" | "ring"
+    length: int    # S_max (full) or window W (ring)
+
+
+def init_cache(
+    batch: int, cfg: ModelConfig, spec: CacheSpec, dtype=jnp.bfloat16
+) -> Params:
+    shape = (batch, cfg.n_kv_heads, spec.length, cfg.head_dim)
+    cache: dict[str, Any] = {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+    if spec.kind == "ring":
+        cache["slot_pos"] = jnp.full((spec.length,), -1, jnp.int32)
+    return cache
+
+
+def decode_step(
+    x: jnp.ndarray,
+    cache: Params,
+    pos: jnp.ndarray,
+    params: Params,
+    cfg: ModelConfig,
+    *,
+    spec: CacheSpec,
+    window: int | jnp.ndarray = 0,
+    use_rope: bool = True,
+) -> tuple[jnp.ndarray, Params]:
+    """One-token decode. x [B,1,d_model]; pos scalar int32 (current index)."""
+    b = x.shape[0]
+    q = _split_heads(common.dense(x, params["wq"]), cfg.n_heads)
+    k_new = _split_heads(common.dense(x, params["wk"]), cfg.n_kv_heads)
+    v_new = _split_heads(common.dense(x, params["wv"]), cfg.n_kv_heads)
+    if use_rope:
+        posv = jnp.full((1,), pos, jnp.int32)
+        q = common.apply_rope(q, posv, cfg.rope_theta)
+        k_new = common.apply_rope(k_new, posv, cfg.rope_theta)
+
+    slot = pos % spec.length if spec.kind == "ring" else pos
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), slot, axis=2
+    )
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), slot, axis=2
+    )
+    new_cache = dict(cache, k=k_cache, v=v_cache)
+
+    if spec.kind == "ring":
+        slot_pos = cache["slot_pos"].at[slot].set(pos)
+        new_cache["slot_pos"] = slot_pos
+        kpos = slot_pos[None, :]
+        valid = (slot_pos >= 0)[None, :] & (kpos <= pos)
+        if not isinstance(window, int) or window > 0:
+            valid &= pos - kpos < jnp.maximum(jnp.asarray(window), 1)
+    else:
+        kpos = jnp.arange(spec.length)[None, :]
+        valid = kpos <= pos
+        valid = jnp.where(
+            jnp.asarray(window) > 0,
+            valid & (pos - kpos < jnp.maximum(jnp.asarray(window), 1)),
+            valid,
+        )
+
+    hkv, group = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    # accumulate in f32 WITHOUT materializing an f32 copy of the cache
+    # (a whole-cache convert would double decode HBM; observed in the
+    # dry-run before this fix)
+    qg = q.reshape(b, hkv, group, 1, cfg.head_dim).astype(k_cache.dtype)
+    s = jnp.einsum(
+        "bhgqd,bhkd->bhgqk", qg, k_cache,
+        preferred_element_type=jnp.float32,
+    ) / (cfg.head_dim ** 0.5)
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bhgqk,bhkd->bhgqd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    out = out.reshape(b, cfg.n_heads, 1, cfg.head_dim).astype(x.dtype)
+    return common.dense(_merge_heads(out), params["wo"]), new_cache

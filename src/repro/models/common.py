@@ -1,0 +1,201 @@
+"""Shared model machinery: configs, norms, RoPE, projections, init.
+
+Design constraints baked in here:
+
+  * **Pure-functional params** (nested dicts of arrays) — no framework
+    beyond jax, so `jax.eval_shape` can produce allocation-free param
+    skeletons for the 512-device dry-run.
+  * **Scan-over-superblocks**: every architecture is expressed as a
+    *superblock* (a short, static list of layer specs) repeated
+    ``n_superblocks`` times; repeated-layer params are stacked on a
+    leading axis and the forward pass is one ``lax.scan``. HLO size (and
+    CPU compile time for 512-device lowering) is depth-independent.
+  * **Explicit shardability**: all projection weights are 2D/3D einsum
+    operands with axes named in distributed/sharding.py's rules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # nested dict pytree of jnp arrays
+
+
+# --------------------------------------------------------------------- #
+# Layer / model configs
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert_ff: int
+    n_shared: int = 0
+    d_shared_ff: int = 0
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    kind: str = "mamba"      # "mamba" | "mlstm" | "slstm"
+    d_state: int = 16        # N (mamba) — mLSTM uses head_dim×head_dim memory
+    d_inner: int = 0         # 0 → d_model
+    chunk: int = 128         # chunkwise-parallel scan block
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One layer inside a superblock."""
+
+    kind: str = "attn"        # "attn" | "mamba" | "mlstm" | "slstm" | "hymba"
+    attn: str = "causal"      # "causal" | "bidir" | "cross"
+    window: int = 0           # >0 → sliding-window attention
+    mlp: str = "swiglu"       # "swiglu" | "geglu" | "gelu" | "relu2" | "" (none)
+    moe: bool = False         # route the MLP through the MoE layer
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str               # dense | moe | ssm | hybrid | enc_dec | vlm | audio
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    superblock: tuple[LayerSpec, ...]
+    n_superblocks: int
+    moe: MoEConfig | None = None
+    ssm: SSMConfig | None = None
+    # encoder (whisper) — decoder fields above describe the decoder
+    n_encoder_superblocks: int = 0
+    encoder_superblock: tuple[LayerSpec, ...] = ()
+    encoder_frames: int = 1500
+    # vlm — context length of stub patch embeddings
+    vision_tokens: int = 0
+    use_qkv_bias: bool = False
+    norm: str = "rmsnorm"     # rmsnorm | layernorm
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    # long_500k eligibility: sub-quadratic decode (SSM state / SWA ring cache)
+    sub_quadratic: bool = False
+    notes: str = ""
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.superblock) * self.n_superblocks
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def param_count(self) -> int:
+        """Exact parameter count via allocation-free eval_shape of init
+        (used for the 6·N·D roofline bookkeeping)."""
+        import numpy as _np
+
+        import jax as _jax
+
+        from repro.models import lm as _lm
+
+        model = (
+            _lm.EncDec(self, remat=False)
+            if self.family == "audio"
+            else _lm.LM(self, remat=False)
+        )
+        skeleton = _jax.eval_shape(model.init, _jax.random.PRNGKey(0))
+        return int(
+            sum(int(_np.prod(l.shape)) for l in _jax.tree.leaves(skeleton))
+        )
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k + shared experts only)."""
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        d = self.d_model
+        dead_per_layer = (m.n_experts - m.top_k) * 3 * d * m.d_expert_ff
+        n_moe_layers = sum(
+            1 for s in self.superblock if s.moe
+        ) * self.n_superblocks
+        return self.param_count() - dead_per_layer * n_moe_layers
+
+
+# --------------------------------------------------------------------- #
+# Primitive layers (pure functions over param dicts)
+# --------------------------------------------------------------------- #
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(
+    x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray, eps: float = 1e-5
+) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm(x: jnp.ndarray, params: Params, kind: str) -> jnp.ndarray:
+    if kind == "rmsnorm":
+        return rms_norm(x, params["scale"])
+    return layer_norm(x, params["scale"], params["bias"])
+
+
+def norm_init(d: int, kind: str) -> Params:
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def dense_init(key, d_in: int, d_out: int, bias: bool = False, scale: float | None = None) -> Params:
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def dense(x: jnp.ndarray, p: Params) -> jnp.ndarray:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# --------------------------------------------------------------------- #
+# Rotary position embedding
+# --------------------------------------------------------------------- #
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x [..., S, D]; positions int32 [..., S] (broadcastable)."""
+    freqs = rope_freqs(x.shape[-1], theta)  # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def activation(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "gelu" or kind == "geglu":
+        return jax.nn.gelu(x, approximate=True)
+    if kind == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    return jax.nn.silu(x)  # swiglu / default

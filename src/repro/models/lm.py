@@ -1,0 +1,566 @@
+"""Model assembly: scan-over-superblock language models.
+
+One generic :class:`LM` covers the decoder-only families (dense, MoE,
+SSM, hybrid, VLM-with-cross-attn); :class:`EncDec` composes two of the
+same block stacks for whisper. Every architecture is
+``superblock × n_superblocks`` with stacked params and a single
+``lax.scan`` (optionally remat'd per superblock), so HLO size — and the
+512-device dry-run compile time — is depth-independent.
+
+Entry points per model:
+    init(key)                          → params
+    forward(params, tokens, context)   → logits        (train/prefill path)
+    loss(params, batch)                → scalar + aux  (next-token CE)
+    init_decode_state(batch, cache_len)→ per-layer caches
+    prefill(params, tokens, context)   → (last logits, state)
+    decode_step(params, token, state, pos) → (logits, state)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import attention, mlp, ssm
+from repro.models import common
+from repro.models.common import LayerSpec, ModelConfig, Params
+
+
+# --------------------------------------------------------------------- #
+# per-spec block: params / forward / cache / decode
+# --------------------------------------------------------------------- #
+def _block_init(key, spec: LayerSpec, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"ln1": common.norm_init(cfg.d_model, cfg.norm)}
+    if spec.kind == "attn":
+        p["attn"] = attention.init(ks[0], cfg)
+    elif spec.kind == "hymba":
+        p["attn"] = attention.init(ks[0], cfg)
+        p["mamba"] = ssm.mamba_init(ks[1], cfg)
+        p["ln_a"] = common.norm_init(cfg.d_model, "rmsnorm")
+        p["ln_m"] = common.norm_init(cfg.d_model, "rmsnorm")
+    elif spec.kind == "mamba":
+        p["mamba"] = ssm.mamba_init(ks[1], cfg)
+    elif spec.kind == "mlstm":
+        p["mlstm"] = ssm.mlstm_init(ks[1], cfg)
+    elif spec.kind == "slstm":
+        p["slstm"] = ssm.slstm_init(ks[1], cfg)
+    else:
+        raise ValueError(spec.kind)
+    if spec.mlp:
+        p["ln2"] = common.norm_init(cfg.d_model, cfg.norm)
+        p["mlp"] = mlp.moe_init(ks[2], cfg, spec.mlp) if spec.moe else mlp.init(
+            ks[2], cfg, spec.mlp
+        )
+    return p
+
+
+def _block_forward(
+    x: jnp.ndarray,
+    p: Params,
+    spec: LayerSpec,
+    cfg: ModelConfig,
+    *,
+    context: jnp.ndarray | None,
+    impl: str,
+    block_k: int = 1024,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence block. Returns (x, moe_aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = constrain(common.norm(x, p["ln1"], cfg.norm), "act")
+    if spec.kind == "attn":
+        if spec.attn == "cross":
+            kv = attention.context_kv(context, p["attn"], cfg)
+            y = attention.cross_forward(h, kv, p["attn"], cfg)
+        else:
+            y = attention.forward(
+                h,
+                p["attn"],
+                cfg,
+                causal=spec.attn == "causal",
+                window=spec.window,
+                impl=impl,
+                block_k=block_k,
+            )
+        x = constrain(x + y, "act")
+    elif spec.kind == "hymba":
+        a = attention.forward(
+            h, p["attn"], cfg, causal=True, window=spec.window, impl=impl,
+            block_k=block_k,
+        )
+        m, _ = ssm.mamba_forward(h, p["mamba"], cfg)
+        x = x + 0.5 * (
+            common.norm(a, p["ln_a"], "rmsnorm")
+            + common.norm(m, p["ln_m"], "rmsnorm")
+        )
+    elif spec.kind == "mamba":
+        y, _ = ssm.mamba_forward(h, p["mamba"], cfg)
+        x = x + y
+    elif spec.kind == "mlstm":
+        y, _ = ssm.mlstm_forward(h, p["mlstm"], cfg)
+        x = x + y
+    elif spec.kind == "slstm":
+        y, _ = ssm.slstm_forward(h, p["slstm"], cfg)
+        x = x + y
+    if spec.mlp:
+        h2 = constrain(common.norm(x, p["ln2"], cfg.norm), "act")
+        if spec.moe:
+            y, aux = mlp.moe_forward(h2, p["mlp"], cfg, spec.mlp)
+        else:
+            y = mlp.forward(h2, p["mlp"], spec.mlp)
+        x = constrain(x + y, "act")
+    return x, aux
+
+
+def _block_cache_init(
+    batch: int, spec: LayerSpec, cfg: ModelConfig, cache_len: int, dtype
+) -> Params:
+    """Decode-state skeleton for one spec (zeros; prefill fills it)."""
+    c: dict[str, Any] = {}
+    if spec.kind == "attn" and spec.attn != "cross":
+        kind = "ring" if spec.window else "full"
+        length = min(spec.window, cache_len) if spec.window else cache_len
+        c["kv"] = attention.init_cache(
+            batch, cfg, attention.CacheSpec(kind, length), dtype
+        )
+    if spec.kind == "attn" and spec.attn == "cross":
+        ctx_len = cfg.vision_tokens or cfg.encoder_frames
+        c["ctx_kv"] = {
+            "k": jnp.zeros((batch, cfg.n_kv_heads, ctx_len, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, cfg.n_kv_heads, ctx_len, cfg.head_dim), dtype),
+        }
+    if spec.kind == "hymba":
+        length = min(spec.window, cache_len) if spec.window else cache_len
+        kind = "ring" if spec.window else "full"
+        c["kv"] = attention.init_cache(
+            batch, cfg, attention.CacheSpec(kind, length), dtype
+        )
+        c["mamba"] = ssm.mamba_init_state(batch, cfg)
+    if spec.kind == "mamba":
+        c["mamba"] = ssm.mamba_init_state(batch, cfg)
+    if spec.kind == "mlstm":
+        s, n = ssm.mlstm_init_state(batch, cfg)
+        c["mlstm"] = {"s": s, "n": n}
+    if spec.kind == "slstm":
+        cc, nn, hh, mm = ssm.slstm_init_state(batch, cfg)
+        c["slstm"] = {"c": cc, "n": nn, "h": hh, "m": mm}
+    return c
+
+
+def _cache_spec_of(spec: LayerSpec, cache: Params) -> attention.CacheSpec:
+    kv = cache["kv"]
+    kind = "ring" if "slot_pos" in kv else "full"
+    return attention.CacheSpec(kind, kv["k"].shape[2])
+
+
+def _block_decode(
+    x: jnp.ndarray,
+    cache: Params,
+    p: Params,
+    spec: LayerSpec,
+    cfg: ModelConfig,
+    pos: jnp.ndarray,
+) -> tuple[jnp.ndarray, Params]:
+    new_cache = dict(cache)
+    h = common.norm(x, p["ln1"], cfg.norm)
+    if spec.kind == "attn":
+        if spec.attn == "cross":
+            kv = (cache["ctx_kv"]["k"], cache["ctx_kv"]["v"])
+            y = attention.cross_forward(h, kv, p["attn"], cfg)
+        else:
+            y, new_kv = attention.decode_step(
+                h, cache["kv"], pos, p["attn"], cfg,
+                spec=_cache_spec_of(spec, cache), window=spec.window,
+            )
+            new_cache["kv"] = new_kv
+        x = constrain(x + y, "act")
+    elif spec.kind == "hymba":
+        a, new_kv = attention.decode_step(
+            h, cache["kv"], pos, p["attn"], cfg,
+            spec=_cache_spec_of(spec, cache), window=spec.window,
+        )
+        m, new_h = ssm.mamba_decode(h, cache["mamba"], p["mamba"], cfg)
+        new_cache["kv"] = new_kv
+        new_cache["mamba"] = new_h
+        x = x + 0.5 * (
+            common.norm(a, p["ln_a"], "rmsnorm")
+            + common.norm(m, p["ln_m"], "rmsnorm")
+        )
+    elif spec.kind == "mamba":
+        y, new_h = ssm.mamba_decode(h, cache["mamba"], p["mamba"], cfg)
+        new_cache["mamba"] = new_h
+        x = x + y
+    elif spec.kind == "mlstm":
+        y, (s, n) = ssm.mlstm_decode(
+            h, (cache["mlstm"]["s"], cache["mlstm"]["n"]), p["mlstm"], cfg
+        )
+        new_cache["mlstm"] = {"s": s, "n": n}
+        x = x + y
+    elif spec.kind == "slstm":
+        st = cache["slstm"]
+        y, (cc, nn, hh, mm) = ssm.slstm_decode(
+            h, (st["c"], st["n"], st["h"], st["m"]), p["slstm"], cfg
+        )
+        new_cache["slstm"] = {"c": cc, "n": nn, "h": hh, "m": mm}
+        x = x + y
+    if spec.mlp:
+        h2 = common.norm(x, p["ln2"], cfg.norm)
+        if spec.moe:
+            y, _ = mlp.moe_forward(h2, p["mlp"], cfg, spec.mlp)
+        else:
+            y = mlp.forward(h2, p["mlp"], spec.mlp)
+        x = x + y
+    return x, new_cache
+
+
+# --------------------------------------------------------------------- #
+# loss helpers
+# --------------------------------------------------------------------- #
+def next_token_nll(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    """logits [B,S,V] (any dtype); targets int32 [B,S] → mean NLL (f32).
+
+    logsumexp form — the elementwise f32 cast fuses into the reduction.
+    Used on small (test) shapes; the trainer path uses ``chunked_ce``.
+    """
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = (
+        jnp.log(
+            jnp.sum(jnp.exp((logits - m).astype(jnp.float32)), axis=-1)
+        )
+        + m[..., 0].astype(jnp.float32)
+    )
+    lab = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - lab.astype(jnp.float32))
+
+
+def chunked_ce(
+    x: jnp.ndarray,          # [B, S, d] final hidden states
+    w: jnp.ndarray,          # [d, V] head weights (cast at use)
+    targets: jnp.ndarray,    # int32 [B, S]
+    weights: jnp.ndarray,    # f32 [B, S] (0 masks a position)
+    block: int = 512,
+) -> jnp.ndarray:
+    """Fused head-projection + softmax-CE, scanned over sequence blocks.
+
+    The full [B,S,V] logits tensor (4 GiB+ per device at 256k vocab) is
+    never materialized: each block computes its own logits, reduces them
+    to a scalar, and is rematerialized in the backward pass. Peak head
+    transient drops from O(S·V) to O(block·V).
+    """
+    b, s, d = x.shape
+    pad = (-s) % block
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        weights = jnp.pad(weights, ((0, 0), (0, pad)))
+    nb = x.shape[1] // block
+    xb = x.reshape(b, nb, block, d).transpose(1, 0, 2, 3)
+    tb = targets.reshape(b, nb, block).transpose(1, 0, 2)
+    wb = weights.reshape(b, nb, block).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        xblk, tblk, wblk = xs
+        logits = constrain(xblk @ w.astype(xblk.dtype), "logits")  # [B, blk, V]
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        lse = (
+            jnp.log(jnp.sum(jnp.exp((logits - m).astype(jnp.float32)), axis=-1))
+            + m[..., 0].astype(jnp.float32)
+        )
+        lab = jnp.take_along_axis(logits, tblk[..., None], axis=-1)[..., 0]
+        nll = (lse - lab.astype(jnp.float32)) * wblk
+        return carry + jnp.sum(nll), None
+
+    total, _ = jax.lax.scan(
+        jax.checkpoint(body, prevent_cse=False), jnp.zeros((), jnp.float32), (xb, tb, wb)
+    )
+    return total / jnp.maximum(jnp.sum(weights), 1.0)
+
+
+# --------------------------------------------------------------------- #
+# the LM
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(eq=False)
+class LM:
+    cfg: ModelConfig
+    remat: bool = True
+    attn_impl: str = "chunked"  # "chunked" | "einsum"
+    attn_block_k: int = 1024    # KV block of the online-softmax scan
+    ce_block: int = 512         # sequence block of the chunked-CE head
+    unroll: bool = False        # python-loop layers (cost-analysis lowering)
+
+    # ------------------------- params ------------------------------- #
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        k_embed, k_blocks, k_head = jax.random.split(key, 3)
+        blocks = []
+        for i, spec in enumerate(cfg.superblock):
+            keys = jax.random.split(
+                jax.random.fold_in(k_blocks, i), cfg.n_superblocks
+            )
+            stacked = jax.vmap(lambda k: _block_init(k, spec, cfg))(keys)
+            blocks.append(stacked)
+        params: dict[str, Any] = {
+            "embed": jax.random.normal(k_embed, (cfg.vocab_size, cfg.d_model))
+            * 0.02,
+            "blocks": tuple(blocks),
+            "final_norm": common.norm_init(cfg.d_model, cfg.norm),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = common.dense_init(
+                k_head, cfg.d_model, cfg.vocab_size
+            )
+        return params
+
+    # ------------------------- forward ------------------------------ #
+    def _scan_blocks(
+        self, x: jnp.ndarray, blocks: tuple, context: jnp.ndarray | None
+    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        cfg = self.cfg
+
+        def superblock_body(carry, sb_params):
+            x, aux = carry
+            for spec, p in zip(cfg.superblock, sb_params):
+                x, a = _block_forward(
+                    x, p, spec, cfg, context=context, impl=self.attn_impl,
+                    block_k=self.attn_block_k,
+                )
+                x = constrain(x, "act")
+                aux = aux + a
+            return (x, aux), None
+
+        body = superblock_body
+        if self.remat:
+            body = jax.checkpoint(superblock_body, prevent_cse=False)
+        carry = (x, jnp.zeros((), jnp.float32))
+        if self.unroll:
+            # python loop: every superblock appears in the HLO — used by the
+            # dry-run's cost lowerings (while bodies are counted once by
+            # XLA's cost analysis, so scan would undercount depth)
+            for i in range(cfg.n_superblocks):
+                sb = jax.tree.map(lambda a: a[i], blocks)
+                carry, _ = body(carry, sb)
+        else:
+            carry, _ = jax.lax.scan(body, carry, blocks)
+        x, aux = carry
+        return x, aux
+
+    def hidden(
+        self,
+        params: Params,
+        tokens: jnp.ndarray,
+        context: jnp.ndarray | None = None,
+        compute_dtype=jnp.bfloat16,
+    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Trunk only: tokens → (final-norm hidden [B,S,d], moe aux)."""
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(compute_dtype)
+        x, aux = self._scan_blocks(x, params["blocks"], context)
+        return common.norm(x, params["final_norm"], cfg.norm), aux
+
+    def head_weight(self, params: Params) -> jnp.ndarray:
+        """[d, V] output-projection weight (tied or dedicated)."""
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["lm_head"]["w"]
+
+    def forward(
+        self,
+        params: Params,
+        tokens: jnp.ndarray,
+        context: jnp.ndarray | None = None,
+        compute_dtype=jnp.bfloat16,
+    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """tokens int32 [B,S] → (logits [B,S,V] (compute dtype), moe aux)."""
+        x, aux = self.hidden(params, tokens, context, compute_dtype)
+        logits = x @ self.head_weight(params).astype(x.dtype)
+        if not self.cfg.tie_embeddings and "b" in params.get("lm_head", {}):
+            logits = logits + params["lm_head"]["b"].astype(x.dtype)
+        return logits, aux
+
+    def loss(
+        self,
+        params: Params,
+        tokens: jnp.ndarray,
+        context: jnp.ndarray | None = None,
+        aux_weight: float = 0.01,
+    ) -> jnp.ndarray:
+        """Chunked-CE loss: full logits are never materialized."""
+        x, aux = self.hidden(params, tokens, context)
+        weights = jnp.ones(tokens.shape, jnp.float32).at[:, -1].set(0.0)
+        targets = jnp.concatenate(
+            [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1
+        )
+        nll = chunked_ce(
+            x, self.head_weight(params), targets, weights, block=self.ce_block
+        )
+        return nll + aux_weight * aux
+
+    # ------------------------- serving ------------------------------ #
+    def init_decode_state(
+        self, batch: int, cache_len: int, dtype=jnp.bfloat16
+    ) -> tuple:
+        cfg = self.cfg
+        state = []
+        for spec in cfg.superblock:
+            one = _block_cache_init(batch, spec, cfg, cache_len, dtype)
+            stacked = jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a[None], (cfg.n_superblocks,) + a.shape
+                ).copy(),
+                one,
+            )
+            state.append(stacked)
+        return tuple(state)
+
+    def fill_context_caches(
+        self, params: Params, state: tuple, context: jnp.ndarray
+    ) -> tuple:
+        """Precompute cross-attention K/V (vision/encoder context) into the
+        decode state — the once-per-request half of prefill."""
+        cfg = self.cfg
+        new_state = list(state)
+        for i, spec in enumerate(cfg.superblock):
+            if spec.kind == "attn" and spec.attn == "cross":
+                k, v = jax.vmap(
+                    lambda p: attention.context_kv(context, p, cfg)
+                )(params["blocks"][i]["attn"])
+                c = dict(state[i])
+                dt = c["ctx_kv"]["k"].dtype
+                c["ctx_kv"] = {"k": k.astype(dt), "v": v.astype(dt)}
+                new_state[i] = c
+        return tuple(new_state)
+
+    def decode_step(
+        self,
+        params: Params,
+        token: jnp.ndarray,   # int32 [B]
+        state: tuple,
+        pos: jnp.ndarray,     # scalar int32 — index being written
+        compute_dtype=jnp.bfloat16,
+    ):
+        cfg = self.cfg
+        x = params["embed"][token][:, None].astype(compute_dtype)
+
+        def body(x, xs):
+            sb_params, sb_cache = xs
+            new_caches = []
+            for spec, p, c in zip(cfg.superblock, sb_params, sb_cache):
+                x, nc = _block_decode(x, c, p, spec, cfg, pos)
+                new_caches.append(nc)
+            return x, tuple(new_caches)
+
+        if self.unroll:
+            new_caches = []
+            for i in range(cfg.n_superblocks):
+                sb_p = jax.tree.map(lambda a: a[i], params["blocks"])
+                sb_c = jax.tree.map(lambda a: a[i], state)
+                x, nc = body(x, (sb_p, sb_c))
+                new_caches.append(nc)
+            new_state = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *new_caches
+            )
+        else:
+            x, new_state = jax.lax.scan(body, x, (params["blocks"], state))
+        x = common.norm(x, params["final_norm"], cfg.norm)
+        if cfg.tie_embeddings:
+            logits = x @ params["embed"].T.astype(x.dtype)
+        else:
+            logits = common.dense(x, params["lm_head"])
+        return logits[:, 0], new_state
+
+
+# --------------------------------------------------------------------- #
+# Encoder–decoder (whisper)
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(eq=False)
+class EncDec:
+    """Whisper-style enc-dec. Encoder input is the (stub) frame embedding
+    stream [B, frames, d_model] — the conv frontend is out of scope per
+    the assignment brief."""
+
+    cfg: ModelConfig
+    remat: bool = True
+    attn_impl: str = "chunked"
+    attn_block_k: int = 1024
+    ce_block: int = 512
+    unroll: bool = False
+
+    def __post_init__(self):
+        self.decoder = LM(
+            self.cfg,
+            remat=self.remat,
+            attn_impl=self.attn_impl,
+            attn_block_k=self.attn_block_k,
+            ce_block=self.ce_block,
+            unroll=self.unroll,
+        )
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        k_enc, k_dec, k_pos = jax.random.split(key, 3)
+        enc_blocks = []
+        for i, spec in enumerate(cfg.encoder_superblock):
+            keys = jax.random.split(
+                jax.random.fold_in(k_enc, i), cfg.n_encoder_superblocks
+            )
+            enc_blocks.append(jax.vmap(lambda k: _block_init(k, spec, cfg))(keys))
+        params = self.decoder.init(k_dec)
+        params["encoder"] = {
+            "blocks": tuple(enc_blocks),
+            "pos_embed": jax.random.normal(
+                k_pos, (cfg.encoder_frames, cfg.d_model)
+            )
+            * 0.02,
+            "final_norm": common.norm_init(cfg.d_model, cfg.norm),
+        }
+        return params
+
+    def encode(
+        self, params: Params, frames: jnp.ndarray, compute_dtype=jnp.bfloat16
+    ) -> jnp.ndarray:
+        cfg = self.cfg
+        x = (frames + params["encoder"]["pos_embed"][: frames.shape[1]]).astype(
+            compute_dtype
+        )
+
+        def body(carry, sb_params):
+            x, aux = carry
+            for spec, p in zip(cfg.encoder_superblock, sb_params):
+                x, a = _block_forward(
+                    x, p, spec, cfg, context=None, impl=self.attn_impl,
+                    block_k=self.attn_block_k,
+                )
+                x = constrain(x, "act")
+                aux += a
+            return (x, aux), None
+
+        body_fn = jax.checkpoint(body, prevent_cse=False) if self.remat else body
+        carry = (x, jnp.zeros((), jnp.float32))
+        if self.unroll:
+            for i in range(cfg.n_encoder_superblocks):
+                sb = jax.tree.map(lambda a: a[i], params["encoder"]["blocks"])
+                carry, _ = body_fn(carry, sb)
+        else:
+            carry, _ = jax.lax.scan(
+                body_fn, carry, params["encoder"]["blocks"]
+            )
+        x = carry[0]
+        return common.norm(x, params["encoder"]["final_norm"], cfg.norm)
+
+    def forward(self, params: Params, tokens: jnp.ndarray, frames: jnp.ndarray):
+        enc = self.encode(params, frames)
+        return self.decoder.forward(params, tokens, context=enc)
+
+    def loss(self, params: Params, tokens: jnp.ndarray, frames: jnp.ndarray):
+        enc = self.encode(params, frames)
+        x, _ = self.decoder.hidden(params, tokens, context=enc)
+        weights = jnp.ones(tokens.shape, jnp.float32).at[:, -1].set(0.0)
+        targets = jnp.concatenate(
+            [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1
+        )
+        return chunked_ce(x, self.decoder.head_weight(params), targets, weights)

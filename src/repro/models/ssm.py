@@ -1,0 +1,337 @@
+"""SSM / recurrent blocks: Mamba (selective SSM), xLSTM (mLSTM + sLSTM).
+
+All three expose the same triple of entry points as attention:
+  ``*_init``      — params
+  ``*_forward``   — full-sequence (train/prefill), *chunkwise-parallel*
+                    where the recurrence allows it (mamba, mLSTM): a
+                    ``lax.scan`` over chunks carrying the recurrent state,
+                    with an intra-chunk associative scan / decay-matrix
+                    computation. Peak transient is O(chunk), so 500k-token
+                    sequences lower with bounded memory.
+  ``*_decode``    — single-token step against the recurrent-state cache
+                    (O(1) per token — the sub-quadratic long_500k path).
+
+Faithfulness notes (recorded per DESIGN.md §2):
+  * mamba: diagonal-A selective SSM; the short depthwise conv of Mamba-1
+    is omitted (input-projection + selective scan carry the systems
+    load; noted as a deviation).
+  * mLSTM: chunkwise GLA-style matrix memory with per-head scalar
+    exp-input/sigmoid-forget gates in log space; normalizer n with
+    ``max(|q·n|, 1)`` stabilization (the paper's m-state max-stabilizer
+    is kept only in the sequential decode path).
+  * sLSTM: exact exponential-gating recurrence with the m-state
+    stabilizer, block-diagonal (per-head) recurrent matrices, sequential
+    ``lax.scan`` — inherently serial, as in the xLSTM paper.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import ModelConfig, Params
+
+
+# ===================================================================== #
+# Mamba (diagonal selective SSM)
+# ===================================================================== #
+def mamba_init(key, cfg: ModelConfig) -> Params:
+    ssm = cfg.ssm
+    d = cfg.d_model
+    di = ssm.d_inner or d
+    n = ssm.d_state
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": common.dense_init(ks[0], d, 2 * di),
+        "w_bcdt": common.dense_init(ks[1], di, 2 * n + 1),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "a_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))
+        ),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": common.dense_init(ks[2], di, d),
+    }
+
+
+def mamba_forward(
+    x: jnp.ndarray, params: Params, cfg: ModelConfig, h0: jnp.ndarray | None = None
+):
+    """x [B,T,d] → (y [B,T,d], h_T [B,di,N]).
+
+    Chunkwise-parallel: the [B,chunk,di,N] decay/increment tensors are
+    computed INSIDE the chunk scan body (materializing them for the full
+    sequence would be O(T·di·N) HBM — observed blowing the hymba train
+    dry-run before this restructuring).
+    """
+    ssm = cfg.ssm
+    di = ssm.d_inner or cfg.d_model
+    n = ssm.d_state
+    b, t, _ = x.shape
+    u, z = jnp.split(common.dense(x, params["in_proj"]), 2, axis=-1)
+    bcdt = common.dense(u, params["w_bcdt"]).astype(jnp.float32)  # [B,T,2n+1]
+    b_t, c_t, dt = bcdt[..., :n], bcdt[..., n : 2 * n], bcdt[..., -1:]
+    a = -jnp.exp(params["a_log"])                                 # [di,N]
+    if h0 is None:
+        h0 = jnp.zeros((b, di, n), jnp.float32)
+    chunk = min(cfg.ssm.chunk, t)
+    pad = (-t) % chunk
+    u_p = jnp.pad(u, ((0, 0), (0, pad), (0, 0))) if pad else u
+    dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)), constant_values=-30.0) if pad else dt
+    b_p = jnp.pad(b_t, ((0, 0), (0, pad), (0, 0))) if pad else b_t
+    c_p = jnp.pad(c_t, ((0, 0), (0, pad), (0, 0))) if pad else c_t
+    tp = t + pad
+    nc = tp // chunk
+
+    def to_chunks(arr):
+        return arr.reshape(b, nc, chunk, arr.shape[-1]).transpose(1, 0, 2, 3)
+
+    def combine(l, r):
+        la, lb = l
+        ra, rb = r
+        return la * ra, lb * ra + rb
+
+    def body(h, xs):
+        u_c, dt_c, b_c, c_c = xs                        # [B,C,·]
+        delta = jax.nn.softplus(dt_c + params["dt_bias"]) + 1e-4  # [B,C,di]
+        decay = jnp.exp(delta[..., None] * a[None, None])         # [B,C,di,N]
+        inc = (delta * u_c.astype(jnp.float32))[..., None] * b_c[:, :, None, :]
+        aa, bb = jax.lax.associative_scan(combine, (decay, inc), axis=1)
+        hs = aa * h[:, None] + bb                       # [B,C,di,N]
+        y = jnp.einsum("bcdn,bcn->bcd", hs, c_c)
+        return hs[:, -1], y
+
+    h_t, y = jax.lax.scan(
+        body, h0, (to_chunks(u_p), to_chunks(dt_p), to_chunks(b_p), to_chunks(c_p))
+    )
+    y = y.transpose(1, 0, 2, 3).reshape(b, tp, di)[:, :t]
+    y = y + u.astype(jnp.float32) * params["d_skip"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return common.dense(y, params["out_proj"]), h_t
+
+
+def mamba_decode(
+    x: jnp.ndarray, h: jnp.ndarray, params: Params, cfg: ModelConfig
+):
+    """x [B,1,d]; h [B,di,N] → (y [B,1,d], h')."""
+    ssm = cfg.ssm
+    n = ssm.d_state
+    u, z = jnp.split(common.dense(x, params["in_proj"]), 2, axis=-1)
+    u1, z1 = u[:, 0], z[:, 0]
+    bcdt = common.dense(u1, params["w_bcdt"]).astype(jnp.float32)
+    b_t, c_t, dt = bcdt[..., :n], bcdt[..., n : 2 * n], bcdt[..., -1:]
+    delta = jax.nn.softplus(dt + params["dt_bias"]) + 1e-4       # [B,di]
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(delta[..., None] * a[None])                  # [B,di,N]
+    uf = u1.astype(jnp.float32)
+    h = h * decay + (delta * uf)[..., None] * b_t[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, c_t) + uf * params["d_skip"]
+    y = (y * jax.nn.silu(z1.astype(jnp.float32))).astype(x.dtype)
+    return common.dense(y, params["out_proj"])[:, None], h
+
+
+def mamba_init_state(batch: int, cfg: ModelConfig) -> jnp.ndarray:
+    di = cfg.ssm.d_inner or cfg.d_model
+    return jnp.zeros((batch, di, cfg.ssm.d_state), jnp.float32)
+
+
+# ===================================================================== #
+# mLSTM (matrix-memory LSTM, chunkwise parallel)
+# ===================================================================== #
+def mlstm_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": common.dense_init(ks[0], d, d),
+        "wk": common.dense_init(ks[1], d, d),
+        "wv": common.dense_init(ks[2], d, d),
+        "w_gates": common.dense_init(ks[3], d, 2 * h),  # (input, forget) per head
+        "wo": common.dense_init(ks[4], d, d),
+        "skip": jnp.ones((d,), jnp.float32),
+    }
+
+
+def _heads(x, h):
+    b, t, d = x.shape
+    return x.reshape(b, t, h, d // h).transpose(0, 2, 1, 3)  # [B,H,T,Dh]
+
+
+def mlstm_forward(
+    x: jnp.ndarray,
+    params: Params,
+    cfg: ModelConfig,
+    state: tuple | None = None,
+):
+    """x [B,T,d] → (y [B,T,d], (S [B,H,Dh,Dh], n [B,H,Dh]))."""
+    h = cfg.n_heads
+    b, t, d = x.shape
+    dh = d // h
+    q = _heads(common.dense(x, params["wq"]), h).astype(jnp.float32) * dh ** -0.5
+    k = _heads(common.dense(x, params["wk"]), h).astype(jnp.float32)
+    v = _heads(common.dense(x, params["wv"]), h).astype(jnp.float32)
+    gates = common.dense(x, params["w_gates"]).astype(jnp.float32)  # [B,T,2H]
+    log_i = -jax.nn.softplus(-gates[..., :h]).transpose(0, 2, 1)    # log σ(i)
+    log_f = -jax.nn.softplus(-gates[..., h:]).transpose(0, 2, 1)    # log σ(f)
+
+    chunk = min(cfg.ssm.chunk if cfg.ssm else 128, t)
+    pad = (-t) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        log_i = jnp.pad(log_i, ((0, 0), (0, 0), (0, pad)), constant_values=-30.0)
+        log_f = jnp.pad(log_f, ((0, 0), (0, 0), (0, pad)))
+    tp = t + pad
+    nc = tp // chunk
+
+    def to_chunks(a):
+        return a.reshape(b, h, nc, chunk, *a.shape[3:]).transpose(
+            2, 0, 1, 3, *range(4, a.ndim + 1)
+        )
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    lic = log_i.reshape(b, h, nc, chunk).transpose(2, 0, 1, 3)
+    lfc = log_f.reshape(b, h, nc, chunk).transpose(2, 0, 1, 3)
+
+    if state is None:
+        s0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, h, dh), jnp.float32)
+    else:
+        s0, n0 = state
+
+    def body(carry, xs):
+        s, n = carry
+        qb, kb, vb, li, lf = xs                         # [B,H,C,·]
+        l_cum = jnp.cumsum(lf, axis=-1)                 # Σ log f up to t
+        # intra-chunk decay matrix D[t, s] = exp(L_t - L_s + log i_s), s ≤ t
+        diff = l_cum[..., :, None] - l_cum[..., None, :] + li[..., None, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        w = jnp.where(tri, jnp.exp(diff), 0.0)          # [B,H,C,C]
+        scores = jnp.einsum("bhtd,bhsd->bhts", qb, kb) * w
+        y_intra = jnp.einsum("bhts,bhsd->bhtd", scores, vb)
+        n_intra = jnp.einsum("bhts,bhsd->bhtd", w, kb)
+        # inter-chunk contribution
+        decay_t = jnp.exp(l_cum)                        # [B,H,C]
+        y_inter = jnp.einsum("bhtd,bhde->bhte", qb, s) * decay_t[..., None]
+        n_inter = n[:, :, None] * decay_t[..., None]
+        y = y_intra + y_inter
+        n_t = n_intra + n_inter
+        denom = jnp.maximum(
+            jnp.abs(jnp.einsum("bhtd,bhtd->bht", qb, n_t)), 1.0
+        )[..., None]
+        y = y / denom
+        # state update
+        tot = l_cum[..., -1]
+        rev = tot[..., None] - l_cum + li               # exp decays for inc
+        s_new = s * jnp.exp(tot)[..., None, None] + jnp.einsum(
+            "bhtd,bhte,bht->bhde", kb, vb, jnp.exp(rev)
+        )
+        n_new = n * jnp.exp(tot)[..., None] + jnp.einsum(
+            "bhtd,bht->bhd", kb, jnp.exp(rev)
+        )
+        return (s_new, n_new), y
+
+    (s_f, n_f), y = jax.lax.scan(body, (s0, n0), (qc, kc, vc, lic, lfc))
+    y = y.transpose(1, 2, 0, 3, 4).reshape(b, h, tp, dh)[:, :, :t]
+    y = y.transpose(0, 2, 1, 3).reshape(b, t, d).astype(x.dtype)
+    y = y + x * params["skip"].astype(x.dtype)
+    return common.dense(y, params["wo"]), (s_f, n_f)
+
+
+def mlstm_decode(x: jnp.ndarray, state: tuple, params: Params, cfg: ModelConfig):
+    """Sequential single step with m-state stabilizer. x [B,1,d]."""
+    h = cfg.n_heads
+    b, _, d = x.shape
+    dh = d // h
+    s, n = state
+    q = common.dense(x, params["wq"]).reshape(b, h, dh).astype(jnp.float32) * dh ** -0.5
+    k = common.dense(x, params["wk"]).reshape(b, h, dh).astype(jnp.float32)
+    v = common.dense(x, params["wv"]).reshape(b, h, dh).astype(jnp.float32)
+    gates = common.dense(x, params["w_gates"]).reshape(b, 2 * h).astype(jnp.float32)
+    i_g = jnp.exp(-jax.nn.softplus(-gates[:, :h]))
+    f_g = jnp.exp(-jax.nn.softplus(-gates[:, h:]))
+    s = s * f_g[..., None, None] + i_g[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k, v
+    )
+    n = n * f_g[..., None] + i_g[..., None] * k
+    y = jnp.einsum("bhd,bhde->bhe", q, s)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)), 1.0)[..., None]
+    y = (y / denom).reshape(b, 1, d).astype(x.dtype)
+    y = y + x * params["skip"].astype(x.dtype)
+    return common.dense(y, params["wo"]), (s, n)
+
+
+def mlstm_init_state(batch: int, cfg: ModelConfig):
+    h = cfg.n_heads
+    dh = cfg.d_model // h
+    return (
+        jnp.zeros((batch, h, dh, dh), jnp.float32),
+        jnp.zeros((batch, h, dh), jnp.float32),
+    )
+
+
+# ===================================================================== #
+# sLSTM (scalar-memory LSTM with exponential gating; sequential)
+# ===================================================================== #
+def slstm_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 3)
+    return {
+        "w_x": common.dense_init(ks[0], d, 4 * d),                 # z,i,f,o
+        "r_h": jax.random.normal(ks[1], (h, dh, 4 * dh)) * dh ** -0.5,
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "wo": common.dense_init(ks[2], d, d),
+    }
+
+
+def slstm_forward(
+    x: jnp.ndarray, params: Params, cfg: ModelConfig, state: tuple | None = None
+):
+    """x [B,T,d] → (y [B,T,d], (c,n,h,m) each [B,d])."""
+    b, t, d = x.shape
+    nh = cfg.n_heads
+    dh = d // nh
+    wx = common.dense(x, params["w_x"]).astype(jnp.float32) + params["b"]
+    if state is None:
+        state = slstm_init_state(b, cfg)
+
+    def step(carry, wx_t):
+        c, n, hid, m = carry
+        rh = jnp.einsum(
+            "bhd,hde->bhe", hid.reshape(b, nh, dh).astype(jnp.float32), params["r_h"]
+        ).reshape(b, 4 * d)
+        # per-head interleave: r_h produces per-head (z,i,f,o) — align by
+        # reshaping both to [B, nh, 4, dh]
+        pre = wx_t.reshape(b, nh, 4, dh) + rh.reshape(b, nh, 4, dh)
+        z = jnp.tanh(pre[:, :, 0])
+        log_i = pre[:, :, 1].reshape(b, d)
+        log_f = -jax.nn.softplus(-pre[:, :, 2]).reshape(b, d)  # log σ(f)
+        o = jax.nn.sigmoid(pre[:, :, 3]).reshape(b, d)
+        z = z.reshape(b, d)
+        m_new = jnp.maximum(log_f + m, log_i)
+        i_p = jnp.exp(log_i - m_new)
+        f_p = jnp.exp(log_f + m - m_new)
+        c_new = f_p * c + i_p * z
+        n_new = f_p * n + i_p
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    wx_t = wx.transpose(1, 0, 2)  # [T,B,4d]
+    (c, n, hid, m), ys = jax.lax.scan(step, state, wx_t)
+    y = ys.transpose(1, 0, 2).astype(x.dtype)
+    return common.dense(y, params["wo"]), (c, n, hid, m)
+
+
+def slstm_decode(x: jnp.ndarray, state: tuple, params: Params, cfg: ModelConfig):
+    y, new_state = slstm_forward(x, params, cfg, state)
+    return y, new_state
+
+
+def slstm_init_state(batch: int, cfg: ModelConfig):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return (z, z, z, z - 30.0)

@@ -1,0 +1,103 @@
+"""Batched serving engine: prefill-then-decode with continuous batching.
+
+The serving counterpart of the trainer: a slot-based engine holding a
+fixed decode batch. Requests occupy slots; finished/empty slots are
+refilled from a queue each step (continuous batching à la Orca/vLLM,
+with fixed shapes so every step hits the same compiled executable).
+
+Prefill is "chunked into decode" for simplicity of shape management on
+small examples: a request's prompt tokens are fed through ``decode_step``
+positions 0..n-1 into its slot's cache (exact same math as a dedicated
+prefill at batch 1 — tests assert equality with ``forward``). Large-scale
+deployments lower the dedicated ``prefill_step`` (see launch/dryrun.py's
+prefill_32k cells).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm as lm_lib
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list[int]
+    max_new_tokens: int = 16
+    # filled by the engine:
+    generated: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model: lm_lib.LM, params, batch_slots: int, cache_len: int):
+        self.model = model
+        self.params = params
+        self.slots = batch_slots
+        self.cache_len = cache_len
+        self.state = model.init_decode_state(batch_slots, cache_len)
+        self.slot_pos = np.full(batch_slots, -1, np.int64)  # -1 = free
+        self.slot_req: list[Request | None] = [None] * batch_slots
+        self._queue: list[Request] = []
+
+        # Single-slot cache write: run a batched decode step but merge only
+        # the updated slot back. For fixed-shape simplicity we decode all
+        # slots every step and mask outputs of free slots.
+        self._step = jax.jit(
+            lambda p, t, s, pos: model.decode_step(p, t, s, pos)
+        )
+
+    def submit(self, req: Request) -> None:
+        self._queue.append(req)
+
+    def _admit(self) -> None:
+        for i in range(self.slots):
+            if self.slot_req[i] is None and self._queue:
+                req = self._queue.pop(0)
+                self.slot_req[i] = req
+                self.slot_pos[i] = 0
+
+    def step(self) -> None:
+        """One engine tick: advance every occupied slot by one token."""
+        self._admit()
+        tokens = np.zeros(self.slots, np.int32)
+        for i, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            p = int(self.slot_pos[i])
+            if p < len(req.prompt):
+                tokens[i] = req.prompt[p]
+            else:
+                tokens[i] = req.generated[-1]
+        # engine-level position = max over slots; per-slot offsets are kept
+        # equal by admitting only into a synchronized wave in this reference
+        # engine (noted simplification; slot-local positions need per-slot
+        # pos vectors which the kernel-level cache supports via ring slots)
+        pos = int(max(self.slot_pos.max(), 0))
+        logits, self.state = self._step(
+            self.params, jnp.asarray(tokens), self.state, jnp.int32(pos)
+        )
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            self.slot_pos[i] += 1
+            p = int(self.slot_pos[i])
+            if p >= len(req.prompt):
+                req.generated.append(int(nxt[i]))
+            if len(req.generated) >= req.max_new_tokens or p + 1 >= self.cache_len:
+                req.done = True
+                self.slot_req[i] = None
+                self.slot_pos[i] = -1
+
+    def run_until_drained(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self._queue and all(r is None for r in self.slot_req):
+                return
+            self.step()
+        raise RuntimeError("serve engine did not drain")

@@ -1,0 +1,184 @@
+"""Checkpointing: atomic, manifest-addressed, resharding-aware.
+
+Layout of a checkpoint directory::
+
+    <root>/step_000100/
+        MANIFEST.json    {"step": 100, "leaves": {...}, "complete": true}
+        arr_00000.npy ... one file per pytree leaf (path-addressed)
+
+Properties needed at 1000-node scale, modeled faithfully here:
+  * **atomic**: data is written into ``step_N.tmp`` and renamed; a crash
+    mid-save never corrupts the latest checkpoint; restore picks the
+    newest *complete* manifest.
+  * **async**: ``save_async`` snapshots to host memory synchronously
+    (cheap) and writes to disk on a background thread, overlapping I/O
+    with the next train steps — the paper's overlap-data-movement idea
+    applied to checkpointing.
+  * **elastic / resharding restore**: leaves are stored unsharded
+    (gathered); ``restore`` re-device_puts against *any* mesh's sharding
+    rules, so a job can resume on a different topology (elastic scaling
+    after losing a pod).
+  * **pipeline state included**: PIPER's VocabState/Vocabulary are plain
+    pytrees, so preprocessing state checkpoints with the train state —
+    loop ① never has to re-run after preemption.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+Params = Any
+_SEP = "/"
+
+
+def _flatten(tree: Params) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        names = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                names.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                names.append(str(p.idx))
+            elif isinstance(p, jax.tree_util.GetAttrKey):
+                names.append(p.name)
+            else:
+                names.append(str(p))
+        flat[_SEP.join(names)] = np.asarray(leaf)
+    return flat
+
+
+def save(root: str, step: int, tree: Params) -> str:
+    """Synchronous atomic save. Returns the final directory."""
+    flat = _flatten(tree)
+    final = os.path.join(root, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    leaves = {}
+    for i, (key, arr) in enumerate(sorted(flat.items())):
+        fname = f"arr_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        leaves[key] = {"file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+    manifest = {"step": step, "leaves": leaves, "complete": True}
+    with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+class AsyncCheckpointer:
+    """Snapshot-on-call, write-on-thread checkpointing."""
+
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    def save_async(self, step: int, tree: Params) -> None:
+        self.wait()  # one outstanding save at a time
+        host_tree = jax.tree.map(np.asarray, tree)  # synchronous snapshot
+
+        def _write():
+            save(self.root, step, host_tree)
+            self._gc()
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(list_steps(self.root))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.root, f"step_{s:08d}"), ignore_errors=True)
+
+
+def list_steps(root: str) -> list[int]:
+    if not os.path.isdir(root):
+        return []
+    out = []
+    for name in os.listdir(root):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if not m:
+            continue
+        manifest = os.path.join(root, name, "MANIFEST.json")
+        try:
+            with open(manifest) as f:
+                if json.load(f).get("complete"):
+                    out.append(int(m.group(1)))
+        except (OSError, json.JSONDecodeError):
+            continue  # incomplete/corrupt — ignore (crash-mid-save)
+    return sorted(out)
+
+
+def latest_step(root: str) -> int | None:
+    steps = list_steps(root)
+    return steps[-1] if steps else None
+
+
+def restore(
+    root: str,
+    step: int,
+    like: Params,
+    sharding_fn: Callable[[Any], Any] | None = None,
+) -> Params:
+    """Restore into the structure of ``like`` (arrays or ShapeDtypeStructs).
+
+    ``sharding_fn(tree_of_leaves) -> tree_of_shardings`` enables elastic
+    restore onto a different mesh: each leaf is device_put with the new
+    sharding as it loads.
+    """
+    d = os.path.join(root, f"step_{step:08d}")
+    with open(os.path.join(d, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    flat_like = _flatten_keys(like)
+    shardings = None
+    if sharding_fn is not None:
+        shardings = _flatten_keys(sharding_fn(like))
+    loaded = {}
+    for key in flat_like:
+        entry = manifest["leaves"].get(key)
+        if entry is None:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = np.load(os.path.join(d, entry["file"]))
+        if shardings is not None:
+            loaded[key] = jax.device_put(arr, shardings[key])
+        else:
+            loaded[key] = arr
+    return _unflatten_like(like, loaded)
+
+
+def _flatten_keys(tree: Params) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        names = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                names.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                names.append(str(p.idx))
+            elif isinstance(p, jax.tree_util.GetAttrKey):
+                names.append(p.name)
+            else:
+                names.append(str(p))
+        flat[_SEP.join(names)] = leaf
+    return flat
+
+
+def _unflatten_like(like: Params, loaded: dict[str, Any]) -> Params:
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    keys = list(_flatten_keys(like).keys())
+    return jax.tree_util.tree_unflatten(treedef, [loaded[k] for k in keys])

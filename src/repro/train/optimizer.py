@@ -1,0 +1,174 @@
+"""Optimizers (AdamW, SGD-momentum, Adafactor-lite) + LR schedules.
+
+Hand-rolled (no optax in the image): each optimizer is an
+(init, update) pair over arbitrary pytrees. Optimizer state mirrors the
+parameter tree leaf-for-leaf, so the parameter sharding rules apply to it
+verbatim (FSDP semantics: sharded first/second moments).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+# --------------------------------------------------------------------- #
+# schedules
+# --------------------------------------------------------------------- #
+def cosine_schedule(
+    peak_lr: float, warmup_steps: int, total_steps: int, min_ratio: float = 0.1
+) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        frac = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return lr
+
+
+def constant_schedule(lr_value: float):
+    return lambda step: jnp.full((), lr_value, jnp.float32)
+
+
+# --------------------------------------------------------------------- #
+# grad utilities
+# --------------------------------------------------------------------- #
+def global_norm(tree: Params) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(tree: Params, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), tree), norm
+
+
+# --------------------------------------------------------------------- #
+# AdamW
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    schedule: Callable = dataclasses.field(
+        default_factory=lambda: constant_schedule(1e-3)
+    )
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+
+
+def adamw_init(params: Params) -> dict:
+    zeros = lambda p: jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), p)
+    return {"m": zeros(params), "v": zeros(params), "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(
+    params: Params, grads: Params, state: dict, cfg: AdamWConfig
+) -> tuple[Params, dict, dict]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.max_grad_norm)
+    step = state["step"] + 1
+    lr = cfg.schedule(step)
+    b1, b2 = cfg.b1, cfg.b2
+    m = jax.tree.map(
+        lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), state["m"], grads
+    )
+    v = jax.tree.map(
+        lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state["v"],
+        grads,
+    )
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + cfg.eps)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"m": m, "v": v, "step": step}, metrics
+
+
+# --------------------------------------------------------------------- #
+# SGD momentum (baseline / ablation)
+# --------------------------------------------------------------------- #
+def sgd_init(params: Params) -> dict:
+    return {
+        "mom": jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def sgd_update(params, grads, state, lr: float = 1e-2, momentum: float = 0.9):
+    mom = jax.tree.map(
+        lambda m, g: momentum * m + g.astype(jnp.float32), state["mom"], grads
+    )
+    new_params = jax.tree.map(
+        lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype), params, mom
+    )
+    return new_params, {"mom": mom, "step": state["step"] + 1}, {}
+
+
+# --------------------------------------------------------------------- #
+# Adafactor-lite (factored second moment — memory-lean option for the
+# 1T-param MoE, where full Adam state triples HBM)
+# --------------------------------------------------------------------- #
+def adafactor_init(params: Params) -> dict:
+    def factored(x):
+        if x.ndim >= 2:
+            return {
+                "vr": jnp.zeros(x.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(x.shape[:-2] + x.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros_like(x, jnp.float32)}
+
+    return {
+        "v": jax.tree.map(factored, params, is_leaf=lambda x: hasattr(x, "ndim")),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(params, grads, state, lr: float = 1e-2, decay: float = 0.8):
+    step = state["step"] + 1
+    beta = 1.0 - step.astype(jnp.float32) ** -decay
+
+    def upd(p, g, v):
+        g32 = g.astype(jnp.float32)
+        sq = jnp.square(g32) + 1e-30
+        if "vr" in v:
+            vr = beta * v["vr"] + (1 - beta) * jnp.mean(sq, axis=-1)
+            vc = beta * v["vc"] + (1 - beta) * jnp.mean(sq, axis=-2)
+            denom = jnp.sqrt(
+                vr[..., None] * vc[..., None, :] / jnp.maximum(
+                    jnp.mean(vr, axis=-1, keepdims=True)[..., None], 1e-30
+                )
+            )
+            new_v = {"vr": vr, "vc": vc}
+        else:
+            nv = beta * v["v"] + (1 - beta) * sq
+            denom = jnp.sqrt(nv)
+            new_v = {"v": nv}
+        upd_ = g32 / jnp.maximum(denom, 1e-30)
+        upd_ = upd_ / jnp.maximum(1.0, global_norm(upd_) / (upd_.size ** 0.5))
+        return (p.astype(jnp.float32) - lr * upd_).astype(p.dtype), new_v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_v = treedef.flatten_up_to(state["v"])
+    outs = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_v = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return new_params, {"v": new_v, "step": step}, {}

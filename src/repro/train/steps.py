@@ -1,0 +1,99 @@
+"""Train / prefill / serve step factories — the functions the launcher
+jits with in/out shardings, and the dry-run lowers.
+
+A "batch" is a dict so all ten architectures share one step signature:
+    tokens  int32 [B, S]                       (always)
+    frames  f32   [B, frames, d_model]         (whisper stub frontend)
+    vision  f32   [B, vision_tokens, d_model]  (vlm stub frontend)
+
+Steps:
+  train_step(params, opt_state, batch)   → (params, opt_state, metrics)
+  prefill_step(params, batch)            → last-position logits
+  serve_step(params, state, token, pos)  → (logits, state)
+
+Gradient accumulation: ``microbatches > 1`` splits the batch on the
+leading axis and accumulates grads in f32 with a ``lax.scan`` (memory-
+bounded large-batch training).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm as lm_lib
+from repro.train import optimizer as opt_lib
+
+Params = Any
+
+
+def _model_loss(model, params, batch):
+    if isinstance(model, lm_lib.EncDec):
+        return model.loss(params, batch["tokens"], batch["frames"])
+    return model.loss(params, batch["tokens"], context=batch.get("vision"))
+
+
+def make_train_step(model, opt_cfg: opt_lib.AdamWConfig, microbatches: int = 1):
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: _model_loss(model, p, batch)
+            )(params)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches) + x.shape[1:]),
+                batch,
+            )
+
+            def body(carry, micro):
+                acc, loss_acc = carry
+                loss, grads = jax.value_and_grad(
+                    lambda p: _model_loss(model, p, micro)
+                )(params)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / microbatches, acc, grads
+                )
+                return (acc, loss_acc + loss / microbatches), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss), _ = jax.lax.scan(
+                body, (zero, jnp.zeros((), jnp.float32)), mb
+            )
+        new_params, new_opt, metrics = opt_lib.adamw_update(
+            params, grads, opt_state, opt_cfg
+        )
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(model):
+    """Prefill = trunk over the prompt + last-position head only (the full
+    [B,S,V] logits of ``forward`` are never needed at prefill)."""
+
+    def prefill_step(params, batch):
+        if isinstance(model, lm_lib.EncDec):
+            enc = model.encode(params, batch["frames"])
+            x, _ = model.decoder.hidden(params, batch["tokens"], context=enc)
+            head = model.decoder.head_weight(params)
+        else:
+            x, _ = model.hidden(params, batch["tokens"], context=batch.get("vision"))
+            head = model.head_weight(params)
+        return x[:, -1] @ head.astype(x.dtype)
+
+    return prefill_step
+
+
+def make_serve_step(model):
+    decoder = model.decoder if isinstance(model, lm_lib.EncDec) else model
+
+    def serve_step(params, state, token, pos):
+        return decoder.decode_step(params, token, state, pos)
+
+    return serve_step

@@ -1,0 +1,24 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 device;
+multi-device tests spawn subprocesses (see tests/multidevice.py)."""
+
+import numpy as np
+import pytest
+
+from repro.core import schema as schema_lib
+from repro.data import synth
+
+
+@pytest.fixture(scope="session")
+def criteo_small():
+    """(padded utf8 buffer, ground-truth binary table, SynthConfig)."""
+    cfg = synth.SynthConfig(rows=400, seed=42)
+    buf, table = synth.make_dataset(cfg)
+    return buf, table, cfg
+
+
+@pytest.fixture(scope="session")
+def oracle_small(criteo_small):
+    from repro.core import baseline
+
+    buf, _, cfg = criteo_small
+    return baseline.run_pipeline(buf, cfg.schema, n_threads=4)

@@ -1,0 +1,35 @@
+"""Run a code snippet in a subprocess with N forced host devices.
+
+The main pytest process must keep exactly 1 device (smoke tests and
+benchmarks depend on it), so every multi-device test executes through
+this helper.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 480) -> str:
+    """Execute ``code`` with XLA_FLAGS device_count=n. Raises on failure."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.abspath(REPO_SRC) + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+        env=env,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode})\n"
+            f"--- stdout ---\n{proc.stdout[-4000:]}\n"
+            f"--- stderr ---\n{proc.stderr[-4000:]}"
+        )
+    return proc.stdout

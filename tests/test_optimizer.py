@@ -1,0 +1,127 @@
+"""Optimizers + schedules + gradient compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed import compression
+from repro.train import optimizer as opt
+
+
+def test_adamw_matches_reference_math():
+    """One AdamW step vs hand-computed reference."""
+    p = {"w": jnp.asarray([1.0, -2.0])}
+    g = {"w": jnp.asarray([0.5, 0.5])}
+    cfg = opt.AdamWConfig(
+        schedule=opt.constant_schedule(0.1),
+        b1=0.9,
+        b2=0.99,
+        eps=1e-8,
+        weight_decay=0.0,
+        max_grad_norm=1e9,
+    )
+    state = opt.adamw_init(p)
+    new_p, new_state, _ = opt.adamw_update(p, g, state, cfg)
+    m = 0.1 * 0.5
+    v = 0.01 * 0.25
+    mh, vh = m / (1 - 0.9), v / (1 - 0.99)
+    expect = 1.0 - 0.1 * mh / (np.sqrt(vh) + 1e-8)
+    np.testing.assert_allclose(float(new_p["w"][0]), expect, rtol=1e-6)
+    assert int(new_state["step"]) == 1
+
+
+def test_adamw_converges_quadratic():
+    target = jnp.asarray([3.0, -1.0, 0.5])
+    p = {"x": jnp.zeros(3)}
+    cfg = opt.AdamWConfig(schedule=opt.constant_schedule(0.05), weight_decay=0.0)
+    state = opt.adamw_init(p)
+    for _ in range(300):
+        g = jax.grad(lambda q: jnp.sum((q["x"] - target) ** 2))(p)
+        p, state, _ = opt.adamw_update(p, g, state, cfg)
+    np.testing.assert_allclose(np.asarray(p["x"]), np.asarray(target), atol=0.05)
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full(4, 3.0), "b": jnp.full(9, 4.0)}
+    clipped, norm = opt.clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(4 * 9 + 9 * 16))
+    new_norm = opt.global_norm(clipped)
+    assert float(new_norm) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_cosine_schedule_shape():
+    sched = opt.cosine_schedule(1.0, warmup_steps=10, total_steps=100, min_ratio=0.1)
+    assert float(sched(jnp.int32(0))) == 0.0
+    assert float(sched(jnp.int32(10))) == pytest.approx(1.0, rel=1e-3)
+    assert float(sched(jnp.int32(5))) == pytest.approx(0.5, rel=1e-3)
+    assert float(sched(jnp.int32(100))) == pytest.approx(0.1, rel=1e-2)
+    assert float(sched(jnp.int32(55))) < 1.0
+
+
+def test_adafactor_shapes_and_descent():
+    p = {"w": jax.random.normal(jax.random.PRNGKey(0), (16, 8)), "b": jnp.zeros(8)}
+    state = opt.adafactor_init(p)
+    assert state["v"]["w"]["vr"].shape == (16,)
+    assert state["v"]["w"]["vc"].shape == (8,)
+    target = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
+
+    def loss(q):
+        return jnp.mean((q["w"] - target) ** 2) + jnp.mean(q["b"] ** 2)
+
+    l0 = float(loss(p))
+    for _ in range(50):
+        g = jax.grad(loss)(p)
+        p, state, _ = opt.adafactor_update(p, g, state, lr=0.05)
+    assert float(loss(p)) < l0 * 0.5
+
+
+# ------------------------------------------------------------------ #
+# gradient compression
+# ------------------------------------------------------------------ #
+def test_quantize_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1024,))
+    q, s = compression.quantize_int8(x)
+    err = np.abs(np.asarray(compression.dequantize_int8(q, s) - x))
+    assert err.max() <= float(s) * 0.51 + 1e-9
+
+
+def test_error_feedback_unbiased_over_time():
+    """With error feedback, the running sum of transmitted values tracks
+    the running sum of true gradients (bias does not accumulate)."""
+    rng = np.random.default_rng(0)
+    err = jnp.zeros(256)
+    total_true = np.zeros(256)
+    total_sent = np.zeros(256)
+    for i in range(60):
+        g = jnp.asarray(rng.standard_normal(256) * 0.01)
+        sent, err = compression.compress_decompress(g, err)
+        total_true += np.asarray(g)
+        total_sent += np.asarray(sent)
+    # residual bounded by one quantization step, not 60 of them
+    resid = np.abs(total_true - total_sent)
+    assert resid.max() < 5e-4
+
+
+def test_compressed_psum_mean_subprocess():
+    from tests.multidevice import run_with_devices
+
+    code = """
+import numpy as np, jax, jax.numpy as jnp
+from repro.distributed import compression
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((4,), ("data",))
+rng = np.random.default_rng(0)
+g = jnp.asarray(rng.standard_normal((4, 64)).astype(np.float32))  # per-shard grads
+e = jnp.zeros((4, 64), jnp.float32)
+with mesh:
+    mean, new_e = compression.compressed_psum_mean({"g": g}, {"g": e}, mesh, ("data",))
+true = np.mean(np.asarray(g), axis=0)
+got = np.asarray(mean["g"])
+assert got.shape == (64,)
+scale = np.abs(np.asarray(g)).max() / 127.0
+assert np.max(np.abs(got - true)) < scale, (np.max(np.abs(got-true)), scale)
+print("OK")
+"""
+    assert "OK" in run_with_devices(code, n_devices=4)

@@ -1,0 +1,83 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import baseline, ops, pipeline as P, schema as schema_lib
+from repro.data import synth
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rows=st.integers(5, 120),
+    seed=st.integers(0, 1 << 30),
+    vocab_range=st.sampled_from([7, 97, 5000]),
+    chunk_kb=st.sampled_from([4, 16]),
+)
+def test_pipeline_equals_oracle_property(rows, seed, vocab_range, chunk_kb):
+    """∀ random tables: columnar two-loop == row-wise oracle, any chunking."""
+    schema = schema_lib.TableSchema(vocab_range=vocab_range)
+    cfg = synth.SynthConfig(schema=schema, rows=rows, seed=seed, sparse_pool=256)
+    buf, _ = synth.make_dataset(cfg)
+    oracle = baseline.run_pipeline(buf, schema, n_threads=3)
+    pipe = P.PiperPipeline(
+        P.PipelineConfig(schema=schema, max_rows_per_chunk=256)
+    )
+    outs = list(pipe.run_stream(lambda: synth.chunk_stream(buf, chunk_kb << 10)))
+    spa = np.concatenate(
+        [np.asarray(o.sparse)[np.asarray(o.valid)] for o in outs]
+    )
+    np.testing.assert_array_equal(spa, oracle["sparse"])
+
+
+@settings(max_examples=30, deadline=None)
+@given(vals=st.lists(st.integers(-(2**31), 2**31 - 1), min_size=1, max_size=64))
+def test_modulus_uint32_semantics(vals):
+    """Modulus interprets int32 bitcasts as unsigned (paper: hashes are
+    always positive) — property vs numpy's uint32 view."""
+    arr = np.asarray(vals, np.int64).astype(np.int32)
+    got = np.asarray(ops.positive_modulus(jnp.asarray(arr), 5000))
+    exp = (arr.view(np.uint32) % np.uint32(5000)).astype(np.int32)
+    np.testing.assert_array_equal(got, exp)
+    assert (got >= 0).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rows=st.integers(2, 60),
+    seed=st.integers(0, 1 << 30),
+    threads=st.integers(1, 8),
+)
+def test_vocab_ids_are_dense_and_order_preserving(rows, seed, threads):
+    """Vocabulary ids form a dense 0..K-1 range and respect first-appearance
+    order (the 'appearing sequence' contract of ApplyVocab-1)."""
+    schema = schema_lib.TableSchema(n_dense=1, n_sparse=2, vocab_range=50)
+    cfg = synth.SynthConfig(schema=schema, rows=rows, seed=seed, sparse_pool=32)
+    buf, _ = synth.make_dataset(cfg)
+    out = baseline.run_pipeline(buf, schema, n_threads=threads)
+    for c in range(schema.n_sparse):
+        ids = out["sparse"][:, c]
+        k = ids.max() + 1
+        assert set(ids.tolist()) == set(range(k))
+        # first occurrence of id i precedes first occurrence of id i+1
+        firsts = [np.flatnonzero(ids == i)[0] for i in range(k)]
+        assert firsts == sorted(firsts)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1 << 30))
+def test_dense_transform_range(seed):
+    """log1p∘neg2zero maps any int32 to [0, log1p(2^31)) and is monotone."""
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-(2**31), 2**31 - 1, size=(64, 4), dtype=np.int64).astype(
+        np.int32
+    )
+    y = np.asarray(ops.dense_transform(jnp.asarray(x)))
+    assert (y >= 0).all()
+    assert np.isfinite(y).all()
+    xs = np.sort(x[:, 0])
+    ys = np.asarray(ops.dense_transform(jnp.asarray(xs[:, None])))[:, 0]
+    assert (np.diff(ys) >= 0).all()
