@@ -7,18 +7,37 @@ thread's work timed, wall time = max over threads + serial merge), so
 numbers reflect the algorithmic scaling behaviour the paper plots, not
 the host's actual core count.
 
+``--sharded`` runs the counterpoint: the data-parallel
+``ShardedPiperPipeline`` (local GenVocab state + one merge tree — no
+per-row synchronization) at shard counts {1, 2, 4, 8} on forced host
+devices, reporting total and per-shard throughput:
+
+    PYTHONPATH=src python benchmarks/fig8_cpu_scaling.py --sharded
+
+(the script forces ``--xla_force_host_platform_device_count=8`` itself
+when jax has not initialized yet).
+
 Output columns: config,threads,stage → seconds.
 """
 
 from __future__ import annotations
 
+import os
+import sys
 import time
+
+if __package__ in (None, ""):  # direct script invocation
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+    sys.path.insert(0, _ROOT)
 
 import numpy as np
 
 from repro.core import baseline, schema as schema_lib
 from repro.data import synth
 from benchmarks.common import emit
+
+SHARD_COUNTS = (1, 2, 4, 8)
 
 ROWS = 6_000
 THREADS = (1, 2, 4, 8, 16)
@@ -85,11 +104,81 @@ def run_config(name: str, vocab_range: int, binary: bool) -> None:
         )
 
 
-def main() -> None:
+def run_sharded() -> None:
+    """Data-parallel engine throughput sweep over SHARD_COUNTS.
+
+    Every shard count processes the SAME dataset (strong scaling): total
+    rows/s should grow with shards because loop ① is local per shard and
+    the only cross-shard work is the final merge tree.
+    """
+    # Force 8 host devices if jax hasn't initialized its backend yet
+    # (XLA_FLAGS is read lazily at first backend use, not at import).
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=8"
+        ).strip()
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import pipeline as pipeline_lib
+    from repro.core import sharded_pipeline as sp_lib
+    from repro.data import loader
+    from repro.distributed.sharding import put_shard_feed
+    from repro.launch.mesh import make_data_mesh
+    from benchmarks.common import time_fn
+
+    n_devices = len(jax.devices())
+    cfg = synth.SynthConfig(rows=ROWS, seed=0)
+    buf, _ = synth.make_dataset(cfg)
+    chunk_bytes = 1 << 14
+
+    for n_shards in SHARD_COUNTS:
+        if n_shards > n_devices:
+            emit(
+                f"fig8/sharded/shards{n_shards}",
+                0.0,
+                f"SKIPPED=only_{n_devices}_devices;set_XLA_FLAGS=--xla_force_host_platform_device_count=8",
+            )
+            continue
+        mesh = make_data_mesh(n_shards)
+        pc = pipeline_lib.PipelineConfig(
+            schema=cfg.schema, chunk_bytes=chunk_bytes, max_rows_per_chunk=512
+        )
+        feed = loader.TabularChunkFeed(buf, chunk_bytes, n_shards)
+        stacks, offsets = feed.shard_stacks()
+        chunks, offs = put_shard_feed(
+            jnp.asarray(stacks), jnp.asarray(offsets), mesh
+        )
+        eng = sp_lib.ShardedPiperPipeline(pc, mesh)
+        sec = time_fn(eng.run_scan, chunks, offs)
+        emit(
+            f"fig8/sharded/shards{n_shards}",
+            sec,
+            f"rows_per_s={ROWS / sec:.0f};rows_per_s_per_shard={ROWS / sec / n_shards:.0f};"
+            f"steps_per_shard={feed.n_steps}",
+        )
+
+
+def main(sharded: bool = False) -> None:
+    if sharded:
+        run_sharded()
+        return
     run_config("vocab5k_utf8", 5_000, binary=False)
     run_config("vocab5k_binary", 5_000, binary=True)
     run_config("vocab1m_utf8", 1_000_000, binary=False)
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--sharded",
+        action="store_true",
+        help="run the data-parallel ShardedPiperPipeline shard sweep "
+        "instead of the CPU-baseline thread sweep",
+    )
+    args = ap.parse_args()
+    main(sharded=args.sharded)

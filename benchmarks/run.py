@@ -23,18 +23,31 @@ from benchmarks import (
 
 SECTIONS = {
     "fig8": fig8_cpu_scaling.main,
+    # data-parallel ShardedPiperPipeline sweep; needs 8 host devices
+    # (XLA_FLAGS=--xla_force_host_platform_device_count=8) or run it
+    # standalone: python benchmarks/fig8_cpu_scaling.py --sharded
+    "fig8_sharded": lambda: fig8_cpu_scaling.main(sharded=True),
     "table3": table3_throughput.main,
     "table4": table4_operators.main,
     "fig9": fig9_end2end.main,
     "fig10": fig10_breakdown.main,
 }
 
+# Sections that force multi-device XLA state and would perturb the
+# single-device sections in the same process: run only when --only names
+# them explicitly.
+OPT_IN = {"fig8_sharded"}
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated section names")
     args = ap.parse_args()
-    names = args.only.split(",") if args.only else list(SECTIONS)
+    names = (
+        args.only.split(",")
+        if args.only
+        else [n for n in SECTIONS if n not in OPT_IN]
+    )
 
     print("name,us_per_call,derived")
     failures = []

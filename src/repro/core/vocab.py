@@ -79,11 +79,72 @@ def update(state: VocabState, modded: jnp.ndarray, valid: jnp.ndarray) -> VocabS
 
 
 def merge(a: VocabState, b: VocabState) -> VocabState:
-    """Merge states from disjoint row shards (one elementwise min)."""
+    """Merge loop-1 states from disjoint row shards (Piper's multi-instance
+    sub-dictionary merge, reduced to one elementwise ``min``).
+
+    ``(VocabState, merge)`` is a commutative monoid:
+
+      * associative:  ``merge(merge(a, b), c) == merge(a, merge(b, c))``
+      * commutative:  ``merge(a, b) == merge(b, a)``
+      * identity:     ``VocabState.init(...)`` (all-NEVER, zero rows)
+
+    because elementwise ``min`` and ``+`` are each associative/commutative
+    and ``NEVER``/``0`` are their identities. That is what lets a
+    multi-instance deployment reduce per-shard states in any order and in
+    log-depth trees (:func:`merge_tree`) — the paper's "cheap merge" that
+    replaces the CPU baseline's serial sub-dictionary merge.
+
+    Shards may also merge element-wise when states carry a leading stack
+    axis (``first_pos [n, C, V]``); :func:`merge_tree` relies on this.
+    """
     return VocabState(
         first_pos=jnp.minimum(a.first_pos, b.first_pos),
         rows_seen=a.rows_seen + b.rows_seen,
     )
+
+
+def merge_tree(states: VocabState) -> VocabState:
+    """Tree-reduce a stack of per-shard loop-1 states into one state.
+
+    Args:
+      states: a :class:`VocabState` whose leaves carry a leading shard
+        axis — ``first_pos int32 [n_shards, n_columns, vocab_range]``,
+        ``rows_seen int32 [n_shards]`` — as produced by running loop ①
+        under ``shard_map`` over the ``data`` mesh axis.
+
+    Returns:
+      The single merged :class:`VocabState` (no leading axis), equal to
+      ``functools.reduce(merge, shards)`` in any shard order (merge is a
+      commutative monoid), but evaluated as a log2-depth halving tree so
+      a large shard count reduces in O(log n) dependent steps.
+
+    The stack is padded to a power of two with the monoid identity
+    (``VocabState.init``: all-``NEVER`` positions, zero row count), which
+    leaves the result unchanged.
+    """
+    n = int(states.first_pos.shape[0])
+    pow2 = 1 << max(n - 1, 0).bit_length()  # next power of two ≥ n
+    if pow2 != n:
+        pad = pow2 - n
+        states = VocabState(
+            first_pos=jnp.concatenate(
+                [
+                    states.first_pos,
+                    jnp.full((pad,) + states.first_pos.shape[1:], NEVER, jnp.int32),
+                ]
+            ),
+            rows_seen=jnp.concatenate(
+                [states.rows_seen, jnp.zeros(pad, jnp.int32)]
+            ),
+        )
+    while pow2 > 1:
+        half = pow2 // 2
+        states = merge(
+            jax.tree.map(lambda x: x[:half], states),
+            jax.tree.map(lambda x: x[half:], states),
+        )
+        pow2 = half
+    return jax.tree.map(lambda x: x[0], states)
 
 
 @jax.tree_util.register_dataclass

@@ -65,7 +65,25 @@ class PiperTokenBatches:
 
 
 class TabularChunkFeed:
-    """Distribute row-framed byte chunks across row shards with offsets."""
+    """Distribute row-framed byte chunks across row shards with offsets.
+
+    Chunk ``i`` is assigned round-robin to shard ``i % n_row_shards`` at
+    step ``i // n_row_shards``; the tail is padded with all-zero chunks
+    (zero rows, offset 0) so every shard sees the same step count. Each
+    chunk carries its **global first-row index** (cumulative newline
+    count), which is what lets sharded loop ① record globally-consistent
+    first-occurrence positions with no cross-shard communication.
+
+    Two layouts over the same assignment:
+
+      * ``stacked``/``offsets`` — step-major ``[n_steps, n_shards, ...]``:
+        one step = one chunk per shard (the column-parallel
+        ``ShardedPiper.run_scan`` contract).
+      * ``shard_stacks()`` — shard-major ``[n_shards, n_steps, ...]``: one
+        private chunk *stack* per shard (the data-parallel
+        ``ShardedPiperPipeline`` contract, where each shard runs its own
+        ``lax.scan`` under ``shard_map``).
+    """
 
     def __init__(self, buf: np.ndarray, chunk_bytes: int, n_row_shards: int):
         from repro.data import synth
@@ -81,6 +99,24 @@ class TabularChunkFeed:
         self.stacked = np.stack(chunks).reshape(n_steps, d, chunk_bytes)
         self.offsets = offsets.reshape(n_steps, d)
         self.n_steps = n_steps
+        self.n_shards = d
+        self.chunk_bytes = chunk_bytes
+
+    def shard_stacks(self) -> tuple[np.ndarray, np.ndarray]:
+        """Per-shard chunk stacks for the data-parallel engine.
+
+        Returns:
+          ``(chunks uint8 [n_shards, n_steps, chunk_bytes],
+          offsets int32 [n_shards, n_steps])`` — shard ``k``'s stack holds
+          chunks ``k, k+n_shards, k+2·n_shards, …`` with their global row
+          offsets. Feed straight into
+          ``ShardedPiperPipeline.run_scan`` (place on the mesh with
+          ``distributed.sharding.put_shard_feed`` first).
+        """
+        return (
+            np.ascontiguousarray(self.stacked.transpose(1, 0, 2)),
+            np.ascontiguousarray(self.offsets.T),
+        )
 
     def __iter__(self) -> Iterator[tuple[np.ndarray, np.ndarray]]:
         for i in range(self.n_steps):

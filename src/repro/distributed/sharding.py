@@ -144,6 +144,42 @@ def param_shardings(params: Params, mesh: Mesh) -> Params:
     )
 
 
+# --------------------------------------------------------------------- #
+# preprocessing-feed shardings (data-parallel ShardedPiperPipeline)
+#
+# The feed layout is fixed by contract with ``TabularChunkFeed.shard_stacks``:
+# leading axis = shard, second axis = scan step. Rows live on their data
+# shard for the whole preprocessing epoch; the finalized vocabulary is the
+# only replicated array (it is read-only in loop ②).
+# --------------------------------------------------------------------- #
+
+
+def shard_feed_spec(mesh: Mesh, rank: int = 3) -> P:
+    """Per-shard chunk stacks ``[n_shards, n_steps, ...]``: shard axis →
+    ``('pod','data')``, everything else local to the shard. (Same layout
+    rule as :func:`batch_spec` — a feed shard IS a batch shard.)"""
+    return batch_spec(mesh, rank)
+
+
+def put_shard_feed(chunks, offsets, mesh: Mesh):
+    """device_put a ``TabularChunkFeed.shard_stacks()`` pair onto the mesh.
+
+    ``chunks`` may be a uint8 array ``[n_shards, n_steps, chunk_bytes]``
+    (UTF-8 wire format) or any pytree of arrays whose first axis is the
+    shard axis (pre-decoded binary feeds); each leaf is placed with its
+    shard axis over the mesh's data axes.
+    """
+    place = lambda x: jax.device_put(
+        x, NamedSharding(mesh, shard_feed_spec(mesh, rank=x.ndim))
+    )
+    return jax.tree.map(place, chunks), place(offsets)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    """Fully-replicated placement (the finalized vocabulary in loop ②)."""
+    return NamedSharding(mesh, P())
+
+
 def batch_spec(mesh: Mesh, rank: int = 2) -> P:
     """tokens [GB, S] / token [GB]: batch over ('pod','data')."""
     return P(data_axes(mesh), *([None] * (rank - 1)))

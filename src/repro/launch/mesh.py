@@ -15,18 +15,35 @@ def make_production_mesh(*, multi_pod: bool = False):
     """16×16 single-pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
-    """Arbitrary mesh with Auto axis types (tests, benchmarks)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    """Arbitrary mesh with Auto axis types (tests, benchmarks).
+
+    ``axis_types`` only exists on newer jax; older versions are
+    Auto-by-construction, so we fall back to the plain constructor.
+    """
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
 
 
 def data_axes(mesh) -> tuple[str, ...]:
     """Axes that shard the batch: ('pod','data') when a pod axis exists."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def make_data_mesh(n_shards: int | None = None):
+    """1-D ``('data',)`` mesh for the data-parallel preprocessing engine.
+
+    Each device on the axis is one Piper *instance*: it streams a disjoint
+    slice of the dataset through loop ① with purely local vocabulary
+    state, and the instances' states meet only in the final
+    ``vocab.merge`` tree-reduce. Defaults to every visible device; pass
+    ``n_shards`` to use a prefix of them (benchmark shard sweeps).
+    """
+    n = len(jax.devices()) if n_shards is None else n_shards
+    return make_mesh((n,), ("data",))

@@ -3,7 +3,11 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dep — property tests skip, rest run
+    from tests._hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import baseline, schema as schema_lib
 from repro.data import synth

@@ -4,7 +4,11 @@ import dataclasses
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dep — property tests skip, rest run
+    from tests._hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import baseline, ops, pipeline as P, schema as schema_lib
 from repro.data import synth

@@ -4,7 +4,11 @@ kernel vs ref; shard-merge invariance."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dep — property tests skip, rest run
+    from tests._hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import vocab as vocab_lib
 from repro.kernels.vocab import kernel as vk
