@@ -17,6 +17,7 @@ from benchmarks import (
     fig8_cpu_scaling,
     fig9_end2end,
     fig10_breakdown,
+    stream_service,
     table3_throughput,
     table4_operators,
 )
@@ -31,6 +32,8 @@ SECTIONS = {
     "table4": table4_operators.main,
     "fig9": fig9_end2end.main,
     "fig10": fig10_breakdown.main,
+    # online streaming preprocessing service: rows/s + p50/p95/p99 latency
+    "stream": stream_service.main,
 }
 
 # Sections that force multi-device XLA state and would perturb the

@@ -1,0 +1,115 @@
+"""Streaming preprocessing service sweep: rows/s + request latency.
+
+Runs the online service end-to-end per input format (paper Config I/II
+utf8 vs Config III binary): offline loop ① builds the vocab state, then
+a seeded stream of randomized-size requests is submitted through the
+bounded ingress and drained. Reports throughput plus p50/p95/p99
+request latency — the latency-bound metrics the offline benchmarks
+don't measure.
+
+Output: the usual ``name,us_per_call,derived`` CSV rows plus one
+machine-readable JSON line per format:
+
+    stream_json/{fmt} {"requests": ..., "rows_per_s": ..., "p50_ms": ...}
+
+    PYTHONPATH=src python benchmarks/stream_service.py [--rows N]
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+if __package__ in (None, ""):  # direct script invocation
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+    sys.path.insert(0, _ROOT)
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import pipeline as pipeline_lib
+from repro.data import loader, synth
+from repro.stream import StreamingPreprocessService
+
+ROWS = 6_000
+BUCKET_ROWS = (256, 1024, 4096)
+# Mixed small/large request sizes: plenty of requests for the latency
+# percentiles, and micro-batch coalescing actually has work to do.
+MAX_REQUEST_ROWS = 400
+QUEUE_DEPTH = 32
+
+
+def _request_sizes(rng: np.random.Generator, total_rows: int) -> list[int]:
+    sizes, left = [], total_rows
+    while left > 0:
+        n = int(min(rng.integers(1, MAX_REQUEST_ROWS + 1), left))
+        sizes.append(n)
+        left -= n
+    return sizes
+
+
+def run_format(fmt: str, rows: int) -> None:
+    cfg = synth.SynthConfig(rows=rows, seed=0)
+    buf, table = synth.make_dataset(cfg)
+    pc = pipeline_lib.PipelineConfig(schema=cfg.schema, input_format=fmt)
+    pipe = pipeline_lib.PiperPipeline(pc)
+
+    # offline loop ① — the vocabulary the service freezes
+    if fmt == "utf8":
+        state = pipe.build_state_stream(synth.chunk_stream(buf, 1 << 14))
+    else:
+        feed = loader.BinaryChunkFeed(table, rows_per_chunk=512)
+        flat = feed.flat_chunks()
+        state = pipe.build_state_stream(
+            {k: v[i] for k, v in flat.items()} for i in range(flat["label"].shape[0])
+        )
+
+    rng = np.random.default_rng(7)
+    sizes = _request_sizes(rng, rows)
+
+    svc = StreamingPreprocessService(
+        pc,
+        state,
+        bucket_rows=BUCKET_ROWS,
+        queue_depth=QUEUE_DEPTH,
+    ).start()
+    try:
+        # warm every bucket once so steady-state latency isn't compile time
+        svc.warmup(
+            next(synth.request_payloads(buf, table, [min(c, rows)], fmt))
+            for c in BUCKET_ROWS
+        )
+        handles = [
+            svc.submit(p) for p in synth.request_payloads(buf, table, sizes, fmt)
+        ]
+        svc.drain()
+        snap = svc.metrics.snapshot()
+        compiled = svc.compile_cache_size()
+    finally:
+        svc.stop()
+
+    # one "call" = one request: the us_per_call column carries the mean
+    # request latency, keeping the cross-section CSV contract comparable
+    emit(
+        f"stream/{fmt}",
+        snap["mean_ms"] / 1e3,
+        f"rows_per_s={snap['rows_per_s']};p50_ms={snap['p50_ms']};"
+        f"p95_ms={snap['p95_ms']};p99_ms={snap['p99_ms']};"
+        f"requests={snap['requests']};wall_s={snap['wall_s']};compiled={compiled}",
+    )
+    print(f"stream_json/{fmt} {svc.metrics.to_json()}")
+
+
+def main(rows: int = ROWS) -> None:
+    for fmt in ("utf8", "binary"):
+        run_format(fmt, rows)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rows", type=int, default=ROWS)
+    args = ap.parse_args()
+    main(rows=args.rows)

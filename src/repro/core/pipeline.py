@@ -126,12 +126,22 @@ class PiperPipeline:
             return vocab_ops.genvocab_update(state, modded, batch.valid)
         return vocab_lib.update(state, modded, batch.valid)
 
-    def build_vocab_stream(self, chunks: Iterable) -> vocab_lib.Vocabulary:
-        """Loop ① over a host iterator (out-of-core / network path)."""
+    def build_state_stream(self, chunks: Iterable) -> vocab_lib.VocabState:
+        """Loop ① over a host iterator, stopping *before* finalization.
+
+        The un-finalized :class:`vocab.VocabState` is the mergeable
+        artifact: hand it to ``stream.StreamingPreprocessService`` so the
+        online service can keep absorbing deltas (``vocab.merge``) and
+        re-finalize between serving steps.
+        """
         state = self.init_state()
         for chunk in chunks:
             state = self._jit_vocab_step(state, jax.tree.map(jnp.asarray, chunk))
-        return vocab_lib.finalize(state)
+        return state
+
+    def build_vocab_stream(self, chunks: Iterable) -> vocab_lib.Vocabulary:
+        """Loop ① over a host iterator (out-of-core / network path)."""
+        return vocab_lib.finalize(self.build_state_stream(chunks))
 
     @functools.partial(jax.jit, static_argnums=0)
     def _build_vocab_scan(self, stacked_chunks) -> vocab_lib.VocabState:
@@ -163,11 +173,18 @@ class PiperPipeline:
             label=batch.label, dense=dense, sparse=sparse_ids, valid=batch.valid
         )
 
+    def frozen_transform(
+        self, vocabulary: vocab_lib.Vocabulary
+    ) -> "FrozenVocabTransform":
+        """Loop ② as a standalone serving-mode step (see the class)."""
+        return FrozenVocabTransform(vocabulary, pipeline=self)
+
     def transform_stream(
         self, vocabulary: vocab_lib.Vocabulary, chunks: Iterable
     ) -> Iterator[schema_lib.ProcessedBatch]:
+        step = self.frozen_transform(vocabulary)
         for chunk in chunks:
-            yield self._jit_transform_chunk(vocabulary, jax.tree.map(jnp.asarray, chunk))
+            yield step(chunk)
 
     @functools.partial(jax.jit, static_argnums=0)
     def transform_scan(
@@ -195,6 +212,63 @@ class PiperPipeline:
     def run_scan(self, stacked_chunks) -> schema_lib.ProcessedBatch:
         vocabulary = self.build_vocab_scan(stacked_chunks)
         return self.transform_scan(vocabulary, stacked_chunks)
+
+
+class FrozenVocabTransform:
+    """Loop ② factored out of the two-loop driver: frozen-vocab serving.
+
+    Wraps a finalized :class:`vocab.Vocabulary` plus the per-chunk
+    operator chain (Decode → Modulus → ApplyVocab ∥ Neg2Zero → Logarithm)
+    behind one jitted callable. This is the unit of work of the *online*
+    streaming service (``repro.stream``): the vocabulary was built
+    offline (``PiperPipeline`` / ``ShardedPiperPipeline`` loop ①) and the
+    step only ever runs loop ②, so it can serve a request stream of
+    unbounded length with bounded state.
+
+    The vocabulary can be swapped between calls (:meth:`swap_vocabulary`)
+    without recompiling — tables of identical shape trace to the same
+    executable — which is what makes the service's incremental vocab
+    refresh a metadata-only operation.
+    """
+
+    def __init__(
+        self,
+        vocabulary: vocab_lib.Vocabulary,
+        config: PipelineConfig | None = None,
+        pipeline: "PiperPipeline | None" = None,
+    ):
+        if pipeline is None:
+            if config is None:
+                raise ValueError("need a PipelineConfig or a PiperPipeline")
+            pipeline = PiperPipeline(config)
+        self._pipe = pipeline
+        self._vocab = vocabulary
+        # Reuse the pipeline's cached jit so offline `transform_stream`
+        # and a transform built from the same pipeline share executables.
+        self._jit = pipeline._jit_transform_chunk
+
+    @property
+    def config(self) -> PipelineConfig:
+        return self._pipe.config
+
+    @property
+    def vocabulary(self) -> vocab_lib.Vocabulary:
+        return self._vocab
+
+    def swap_vocabulary(self, vocabulary: vocab_lib.Vocabulary) -> None:
+        """Atomically replace the frozen vocabulary (same shapes → no
+        retrace). Callers serialize swaps against :meth:`__call__`; the
+        streaming service applies them only between micro-batch steps."""
+        self._vocab = vocabulary
+
+    def __call__(self, chunk) -> schema_lib.ProcessedBatch:
+        return self._jit(self._vocab, jax.tree.map(jnp.asarray, chunk))
+
+    def compile_cache_size(self) -> int:
+        """Number of compiled executables behind this step (jit cache
+        entries). The scheduler's shape discipline pins this: after
+        warmup it must stop growing (tests/test_stream_service.py)."""
+        return self._jit._cache_size()
 
 
 def flatten_processed(

@@ -148,6 +148,19 @@ class ShardedPiperPipeline:
             check_rep=False,
         )(chunks, offsets)
 
+    def build_state_scan(self, chunks, offsets) -> vocab_lib.VocabState:
+        """Loop ① up to (but not including) finalization: per-shard local
+        accumulation under ``shard_map``, then the monoid merge tree.
+
+        The merged, un-finalized :class:`~repro.core.vocab.VocabState` is
+        what the online streaming service consumes — it stays mergeable,
+        so later deltas (new shards, new days of logs) fold in with
+        ``vocab.merge`` and the service re-finalizes between steps.
+        """
+        self._check_feed(chunks)
+        states = self._jit_shard_states(chunks, offsets)
+        return vocab_lib.merge_tree(states)
+
     def build_vocab_scan(self, chunks, offsets) -> vocab_lib.Vocabulary:
         """Loop ① end-to-end: local accumulation → merge tree → finalize.
 
@@ -162,10 +175,7 @@ class ShardedPiperPipeline:
           to what the single-device engine builds from the same chunk
           sequence.
         """
-        self._check_feed(chunks)
-        states = self._jit_shard_states(chunks, offsets)
-        merged = vocab_lib.merge_tree(states)
-        return vocab_lib.finalize(merged)
+        return vocab_lib.finalize(self.build_state_scan(chunks, offsets))
 
     # -------------------------------------------------------------- #
     # loop ② — embarrassingly parallel ApplyVocab + dense transforms

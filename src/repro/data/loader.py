@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Callable, Iterator
 
 import numpy as np
@@ -123,8 +124,73 @@ class TabularChunkFeed:
             yield self.stacked[i], self.offsets[i]
 
 
+class BinaryChunkFeed:
+    """``TabularChunkFeed``'s paper-Config-III counterpart: pre-decoded rows.
+
+    Slices a binary table (``{label, dense, sparse}`` int32 arrays, the
+    output of ``synth.generate_binary``) into fixed-row chunks, assigned
+    round-robin to row shards exactly like ``TabularChunkFeed`` (chunk
+    ``i`` → shard ``i % d``, step ``i // d``), with the same global
+    first-row offsets. Tail rows of the last chunk and whole pad chunks
+    carry ``valid=False``.
+    """
+
+    def __init__(self, table: dict, rows_per_chunk: int, n_row_shards: int = 1):
+        rows = int(table["label"].shape[0])
+        rpc = int(rows_per_chunk)
+        d = int(n_row_shards)
+        n_chunks = (rows + rpc - 1) // rpc
+        self.n_steps = (n_chunks + d - 1) // d
+        self.n_shards = d
+        self.rows_per_chunk = rpc
+        total = self.n_steps * d
+        padded = total * rpc
+
+        def pack(key):
+            arr = np.asarray(table[key], dtype=np.int32)
+            out = np.zeros((padded,) + arr.shape[1:], np.int32)
+            out[:rows] = arr
+            return out.reshape((self.n_steps, d, rpc) + arr.shape[1:])
+
+        valid = (np.arange(padded) < rows).reshape(self.n_steps, d, rpc)
+        self.stacked = {
+            "label": pack("label"),
+            "dense": pack("dense"),
+            "sparse": pack("sparse"),
+            "valid": valid,
+        }
+        self.offsets = np.minimum(np.arange(total) * rpc, rows).astype(
+            np.int32
+        ).reshape(self.n_steps, d)
+
+    def flat_chunks(self) -> dict:
+        """Chunk-order ``[n_steps*d, rows, ...]`` pytree — the single-device
+        ``PiperPipeline.run_scan`` feed (with ``input_format="binary"``)."""
+        return {
+            k: np.ascontiguousarray(
+                v.reshape((-1,) + v.shape[2:])
+            )
+            for k, v in self.stacked.items()
+        }
+
+    def shard_stacks(self) -> tuple[dict, np.ndarray]:
+        """Shard-major ``([n_shards, n_steps, rows, ...] pytree, offsets)``
+        — the ``ShardedPiperPipeline.run_scan`` feed, same contract as
+        ``TabularChunkFeed.shard_stacks``."""
+        chunks = {
+            k: np.ascontiguousarray(np.swapaxes(v, 0, 1))
+            for k, v in self.stacked.items()
+        }
+        return chunks, np.ascontiguousarray(self.offsets.T)
+
+
 class Prefetcher:
-    """Background-thread prefetch queue over any step-indexed batch_fn."""
+    """Background-thread prefetch queue over any step-indexed batch_fn.
+
+    A ``batch_fn`` exception does not die silently with the daemon
+    thread: it is captured and re-raised from the consumer's ``get()``
+    (otherwise ``get()`` would block forever on a dead producer).
+    """
 
     def __init__(self, batch_fn: Callable[[int], dict], depth: int = 2):
         self.batch_fn = batch_fn
@@ -133,6 +199,7 @@ class Prefetcher:
         self._stop = threading.Event()
         self._next_step = 0
         self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
 
     def start(self, start_step: int = 0):
         self._next_step = start_step
@@ -141,19 +208,49 @@ class Prefetcher:
             step = start_step
             while not self._stop.is_set():
                 try:
-                    self._q.put((step, self.batch_fn(step)), timeout=0.1)
-                    step += 1
-                except queue.Full:
-                    continue
+                    item = (step, self.batch_fn(step))
+                except BaseException as e:  # noqa: BLE001 — surface in get()
+                    self._error = e
+                    self._stop.set()
+                    return
+                while not self._stop.is_set():
+                    try:
+                        self._q.put(item, timeout=0.1)
+                        step += 1
+                        break
+                    except queue.Full:
+                        continue
 
         self._thread = threading.Thread(target=_producer, daemon=True)
         self._thread.start()
         return self
 
-    def get(self) -> tuple[int, dict]:
-        return self._q.get()
+    def get(self, timeout: float | None = None) -> tuple[int, dict]:
+        """Next (step, batch). Re-raises any producer exception.
+
+        ``timeout`` is a real deadline: ``TimeoutError`` after that many
+        seconds with no batch (None = wait indefinitely, polling for
+        producer death)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            wait = 0.1
+            if deadline is not None:
+                wait = min(wait, max(deadline - time.monotonic(), 0.001))
+            try:
+                return self._q.get(timeout=wait)
+            except queue.Empty:
+                if self._error is not None:
+                    raise RuntimeError(
+                        "Prefetcher batch_fn failed"
+                    ) from self._error
+                if self._stop.is_set():
+                    raise RuntimeError("Prefetcher stopped while get() waited")
+                if deadline is not None and time.monotonic() >= deadline:
+                    raise TimeoutError("Prefetcher.get timed out")
 
     def stop(self):
+        """Stop the producer; safe to call more than once."""
         self._stop.set()
-        if self._thread:
-            self._thread.join(timeout=1.0)
+        t, self._thread = self._thread, None
+        if t is not None:
+            t.join(timeout=1.0)

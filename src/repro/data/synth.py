@@ -109,6 +109,34 @@ def make_dataset(cfg: SynthConfig):
     return pad_bytes(raw), table
 
 
+def row_spans(buf: np.ndarray) -> np.ndarray:
+    """Byte span of every encoded row: int64 ``[rows, 2]`` (start, end).
+
+    ``end`` is exclusive and includes the row's trailing newline, so
+    ``buf[start:end]`` is a whole-row payload — the slicing primitive for
+    carving a buffer into streaming-service requests.
+    """
+    nl = np.flatnonzero(buf == schema_lib.NEWLINE)
+    starts = np.concatenate([[0], nl[:-1] + 1])
+    return np.stack([starts, nl + 1], axis=1)
+
+
+def request_payloads(
+    buf: np.ndarray, table: dict, sizes, input_format: str = "utf8"
+):
+    """Slice a synthetic dataset into consecutive streaming-service
+    payloads of ``sizes`` rows each: whole-row utf8 byte slices, or
+    ``{label, dense, sparse}`` column slices (paper Config III)."""
+    spans = row_spans(buf)
+    row0 = 0
+    for n in sizes:
+        if input_format == "utf8":
+            yield buf[spans[row0, 0] : spans[row0 + n - 1, 1]]
+        else:
+            yield {k: table[k][row0 : row0 + n] for k in ("label", "dense", "sparse")}
+        row0 += n
+
+
 def chunk_stream(buf: np.ndarray, chunk_bytes: int):
     """Split a padded byte buffer into row-aligned chunks for streaming.
 

@@ -1,0 +1,32 @@
+"""Online streaming preprocessing (Piper-as-a-service).
+
+Offline, the two-loop engines maximize throughput over a finite
+dataset. This package is the *online* execution mode: a long-lived
+service running loop ② with a frozen (offline-built, incrementally
+refreshable) vocabulary over a continuous request stream —
+latency-bound, fixed-shape, backpressured.
+
+  * ``scheduler`` — micro-batch coalescing into bucketed fixed shapes
+    with per-request result routing;
+  * ``service``   — the service loop: bounded ingress, double-buffered
+    dispatch, atomic vocab refresh, graceful drain;
+  * ``metrics``   — rows/s + p50/p95/p99 request-latency accounting.
+"""
+
+from repro.stream.metrics import ServiceMetrics
+from repro.stream.scheduler import (
+    DEFAULT_BUCKET_ROWS,
+    MicroBatchScheduler,
+    StreamRequest,
+    make_request,
+)
+from repro.stream.service import StreamingPreprocessService
+
+__all__ = [
+    "DEFAULT_BUCKET_ROWS",
+    "MicroBatchScheduler",
+    "ServiceMetrics",
+    "StreamRequest",
+    "StreamingPreprocessService",
+    "make_request",
+]

@@ -1,0 +1,78 @@
+"""Service-side accounting for the streaming preprocessing service.
+
+Two signals, matching how online preprocessing is judged (tf.data
+service-style disaggregated deployments are provisioned on both):
+
+  * **throughput** — valid rows emitted per wall-second over the serving
+    window (first submit → last completion);
+  * **request latency** — submit-to-result wall time per request, as
+    p50/p95/p99 percentiles (the latency-bound view the offline engine
+    never needed).
+
+``ServiceMetrics`` is thread-safe: the submitting threads and the
+service loop record concurrently. ``snapshot()`` returns a plain dict
+(the JSON contract of ``benchmarks/stream_service.py``).
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+
+import numpy as np
+
+PERCENTILES = (50.0, 95.0, 99.0)
+
+
+class ServiceMetrics:
+    """Rows/s + p50/p95/p99 request-latency accounting."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._latencies: list[float] = []
+        self._rows = 0
+        self._t_first_submit: float | None = None
+        self._t_last_done: float | None = None
+
+    def note_submit(self, now: float | None = None) -> None:
+        """Mark a request entering the service (opens the wall window)."""
+        now = time.perf_counter() if now is None else now
+        with self._lock:
+            if self._t_first_submit is None:
+                self._t_first_submit = now
+
+    def record(self, latency_s: float, n_rows: int, now: float | None = None) -> None:
+        """Record one completed request."""
+        now = time.perf_counter() if now is None else now
+        with self._lock:
+            self._latencies.append(latency_s)
+            self._rows += int(n_rows)
+            self._t_last_done = now
+
+    def snapshot(self) -> dict:
+        """Point-in-time summary: requests, rows, rows_per_s, p*_ms."""
+        with self._lock:
+            lat = list(self._latencies)
+            rows = self._rows
+            t0, t1 = self._t_first_submit, self._t_last_done
+        wall = (t1 - t0) if (t0 is not None and t1 is not None) else 0.0
+        out = {
+            "requests": len(lat),
+            "rows": rows,
+            "wall_s": round(wall, 6),
+            "rows_per_s": round(rows / wall, 1) if wall > 0 else 0.0,
+        }
+        if lat:
+            arr = np.asarray(lat, dtype=np.float64) * 1e3
+            for p in PERCENTILES:
+                out[f"p{p:g}_ms"] = round(float(np.percentile(arr, p)), 3)
+            out["mean_ms"] = round(float(arr.mean()), 3)
+        else:
+            for p in PERCENTILES:
+                out[f"p{p:g}_ms"] = 0.0
+            out["mean_ms"] = 0.0
+        return out
+
+    def to_json(self) -> str:
+        return json.dumps(self.snapshot(), sort_keys=True)

@@ -1,0 +1,300 @@
+"""Micro-batch coalescing scheduler: fixed shapes over a request stream.
+
+The streaming service receives *variable-size* row requests but XLA
+executables want *fixed* shapes — recompiling per request size would
+stall the latency path exactly like the serving engine's problem with
+ragged decode batches. ``serve/engine.py`` solves it with fixed slot
+counts; here the same continuous-batching discipline is applied to
+preprocessing:
+
+  * requests are coalesced FIFO into **micro-batches**;
+  * each micro-batch is padded to the smallest of a small set of
+    **bucket capacities** (default {1Ki, 4Ki, 16Ki} rows) so every step
+    runs one of ``len(buckets)`` pre-known shapes — after one warmup per
+    bucket, no step ever compiles again (pinned by jit cache-miss
+    counting in tests/test_stream_service.py);
+  * each bucket owns a :class:`~repro.core.pipeline.FrozenVocabTransform`
+    (loop ② with the offline-finalized vocabulary) sized to its capacity;
+  * results are **routed back per request** by row span: concatenated
+    request rows decode to contiguous output rows (the decoder assigns
+    row *k* to the *k*-th newline), so the route step is a slice.
+
+Both input formats are supported, matching ``PipelineConfig``:
+``"utf8"`` requests carry row-framed encoded bytes (paper Config I/II);
+``"binary"`` requests carry pre-decoded ``{label, dense, sparse}``
+columns (Config III).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+import numpy as np
+
+from repro.core import pipeline as pipeline_lib
+from repro.core import schema as schema_lib
+from repro.core import vocab as vocab_lib
+
+DEFAULT_BUCKET_ROWS = (1024, 4096, 16384)
+
+
+class StreamRequest:
+    """One in-flight preprocessing request — also the caller's handle.
+
+    ``payload`` is either a uint8 array of whole encoded rows (utf8) or a
+    ``{label, dense, sparse}`` dict of per-row arrays (binary). The
+    service fills the timing fields; :meth:`result` blocks until the
+    request's rows come back from the device (or the service failed).
+    """
+
+    def __init__(self, payload, n_rows: int, n_bytes: int):
+        self.payload = payload
+        self.n_rows = n_rows
+        self.n_bytes = n_bytes
+        self.submit_t: float | None = None
+        self.done_t: float | None = None
+        self._done = threading.Event()
+        self._result: dict | None = None
+        self._error: BaseException | None = None
+
+    def result(self, timeout: float | None = None) -> dict:
+        """Blocking fetch: ``{label, dense, sparse}`` numpy arrays with
+        exactly ``n_rows`` rows (padding already stripped)."""
+        if not self._done.wait(timeout):
+            raise TimeoutError("stream request not completed in time")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    @property
+    def latency_s(self) -> float | None:
+        if self.submit_t is None or self.done_t is None:
+            return None
+        return self.done_t - self.submit_t
+
+    # -- service side ------------------------------------------------- #
+    def _finish(self, result: dict) -> None:
+        self._result = result
+        if self.done_t is None:
+            self.done_t = time.perf_counter()
+        self._done.set()
+
+    def _fail(self, err: BaseException) -> None:
+        self._error = err
+        if self.done_t is None:
+            self.done_t = time.perf_counter()
+        self._done.set()
+
+
+def make_request(payload, config: pipeline_lib.PipelineConfig) -> StreamRequest:
+    """Validate + wrap a raw payload for ``config.input_format``."""
+    schema = config.schema
+    if config.input_format == "utf8":
+        buf = np.asarray(payload, dtype=np.uint8)
+        if buf.ndim != 1 or buf.size == 0:
+            raise ValueError("utf8 payload must be a non-empty 1-D byte array")
+        if buf[-1] != schema_lib.NEWLINE:
+            raise ValueError("utf8 payload must hold whole rows (end with \\n)")
+        n_rows = int((buf == schema_lib.NEWLINE).sum())
+        return StreamRequest(buf, n_rows=n_rows, n_bytes=int(buf.size))
+    cols = {k: np.asarray(payload[k], dtype=np.int32) for k in ("label", "dense", "sparse")}
+    if cols["label"].ndim != 1:
+        raise ValueError(f"binary label must be 1-D, got shape {cols['label'].shape}")
+    n_rows = cols["label"].shape[0]
+    if n_rows == 0:
+        raise ValueError("binary payload must hold at least one row")
+    if cols["dense"].shape != (n_rows, schema.n_dense) or cols["sparse"].shape != (
+        n_rows,
+        schema.n_sparse,
+    ):
+        raise ValueError(
+            f"binary payload shapes {cols['dense'].shape}/{cols['sparse'].shape} "
+            f"do not match schema (n_dense={schema.n_dense}, n_sparse={schema.n_sparse})"
+        )
+    return StreamRequest(cols, n_rows=n_rows, n_bytes=0)
+
+
+@dataclasses.dataclass
+class Bucket:
+    """One fixed capacity: rows, utf8 byte capacity, compiled transform."""
+
+    rows: int
+    chunk_bytes: int
+    transform: pipeline_lib.FrozenVocabTransform
+
+
+@dataclasses.dataclass
+class MicroBatch:
+    """A packed step: the padded chunk plus per-request output row spans."""
+
+    bucket: Bucket
+    requests: list[StreamRequest]
+    spans: list[tuple[int, int]]
+    chunk: object  # uint8 [chunk_bytes] (utf8) or {label,dense,sparse,valid} dict
+
+    @property
+    def n_rows(self) -> int:
+        return self.spans[-1][1] if self.spans else 0
+
+
+class MicroBatchScheduler:
+    """Packs requests into bucketed fixed-shape chunks and routes results.
+
+    Pure packing + dispatch — no threads. The service loop drives it:
+    its ``_gather`` coalesces queued requests FIFO using :meth:`fits`,
+    then ``assemble`` builds the padded chunk, ``dispatch`` launches the
+    (async) device transform, and ``route`` blocks on the result and
+    slices it back per request.
+
+    Args:
+      config: the shared :class:`~repro.core.pipeline.PipelineConfig`
+        (``max_rows_per_chunk``/``chunk_bytes`` are overridden per bucket).
+      vocabulary: the frozen offline-built vocabulary.
+      bucket_rows: ascending row capacities. A request larger than the
+        biggest bucket is rejected at admission (callers shard such bulk
+        jobs through the offline engines instead).
+      bytes_per_row: utf8 byte budget per bucket row. The default —
+        ``schema.max_row_bytes`` — guarantees any row-fitting batch also
+        byte-fits; smaller values trade buffer memory for the chance that
+        the byte axis, not the row axis, picks the bucket.
+    """
+
+    def __init__(
+        self,
+        config: pipeline_lib.PipelineConfig,
+        vocabulary: vocab_lib.Vocabulary,
+        bucket_rows: tuple[int, ...] = DEFAULT_BUCKET_ROWS,
+        bytes_per_row: int | None = None,
+    ):
+        if not bucket_rows:
+            raise ValueError("need at least one bucket capacity")
+        self.config = config
+        self.schema = config.schema
+        self.bytes_per_row = (
+            int(bytes_per_row) if bytes_per_row else config.schema.max_row_bytes
+        )
+        self.buckets: list[Bucket] = []
+        for rows in sorted(set(int(r) for r in bucket_rows)):
+            bucket_cfg = dataclasses.replace(
+                config,
+                max_rows_per_chunk=rows,
+                chunk_bytes=rows * self.bytes_per_row,
+            )
+            self.buckets.append(
+                Bucket(
+                    rows=rows,
+                    chunk_bytes=rows * self.bytes_per_row,
+                    transform=pipeline_lib.FrozenVocabTransform(
+                        vocabulary, config=bucket_cfg
+                    ),
+                )
+            )
+
+    # -- capacity queries --------------------------------------------- #
+    @property
+    def max_rows(self) -> int:
+        return self.buckets[-1].rows
+
+    @property
+    def max_bytes(self) -> int:
+        return self.buckets[-1].chunk_bytes
+
+    def admits(self, req: StreamRequest) -> bool:
+        """Whether the request fits the largest bucket at all."""
+        if req.n_rows > self.max_rows:
+            return False
+        return self.config.input_format != "utf8" or req.n_bytes <= self.max_bytes
+
+    def fits(self, rows: int, nbytes: int, req: StreamRequest) -> bool:
+        """Whether ``req`` still fits a batch already holding rows/bytes."""
+        if rows + req.n_rows > self.max_rows:
+            return False
+        return (
+            self.config.input_format != "utf8"
+            or nbytes + req.n_bytes <= self.max_bytes
+        )
+
+    def select_bucket(self, rows: int, nbytes: int) -> Bucket:
+        """Smallest bucket covering the batch on both axes."""
+        for b in self.buckets:
+            if rows <= b.rows and (
+                self.config.input_format != "utf8" or nbytes <= b.chunk_bytes
+            ):
+                return b
+        raise ValueError(
+            f"batch of {rows} rows / {nbytes} bytes exceeds the largest bucket "
+            f"({self.max_rows} rows / {self.max_bytes} bytes)"
+        )
+
+    # -- packing ------------------------------------------------------- #
+    def assemble(self, requests: list[StreamRequest]) -> MicroBatch:
+        """Pack coalesced requests into one fixed-shape padded chunk."""
+        spans, row = [], 0
+        for r in requests:
+            spans.append((row, row + r.n_rows))
+            row += r.n_rows
+        nbytes = sum(r.n_bytes for r in requests)
+        bucket = self.select_bucket(row, nbytes)
+
+        if self.config.input_format == "utf8":
+            chunk = np.zeros(bucket.chunk_bytes, dtype=np.uint8)
+            cursor = 0
+            for r in requests:
+                chunk[cursor : cursor + r.n_bytes] = r.payload
+                cursor += r.n_bytes
+        else:
+            cap = bucket.rows
+            label = np.zeros(cap, np.int32)
+            dense = np.zeros((cap, self.schema.n_dense), np.int32)
+            sparse = np.zeros((cap, self.schema.n_sparse), np.int32)
+            cursor = 0
+            for r in requests:
+                n = r.n_rows
+                label[cursor : cursor + n] = r.payload["label"]
+                dense[cursor : cursor + n] = r.payload["dense"]
+                sparse[cursor : cursor + n] = r.payload["sparse"]
+                cursor += n
+            chunk = {
+                "label": label,
+                "dense": dense,
+                "sparse": sparse,
+                "valid": np.arange(cap) < row,
+            }
+        return MicroBatch(bucket=bucket, requests=requests, spans=spans, chunk=chunk)
+
+    # -- execution ----------------------------------------------------- #
+    def dispatch(self, batch: MicroBatch) -> schema_lib.ProcessedBatch:
+        """Launch the bucket's compiled transform. JAX dispatch is async:
+        the call returns immediately with device futures, which is what
+        lets the service assemble batch *i+1* while *i* transforms."""
+        return batch.bucket.transform(batch.chunk)
+
+    def route(self, batch: MicroBatch, out: schema_lib.ProcessedBatch) -> list[dict]:
+        """Block on the device result and slice it per request (batch
+        order). The caller finishes the requests — the service records
+        latency *before* unblocking waiters, so a metrics reset right
+        after ``result()`` returns can never lose the record."""
+        label = np.asarray(out.label)
+        dense = np.asarray(out.dense)
+        sparse = np.asarray(out.sparse)
+        return [
+            {"label": label[lo:hi], "dense": dense[lo:hi], "sparse": sparse[lo:hi]}
+            for (lo, hi) in batch.spans
+        ]
+
+    # -- vocab + compile bookkeeping ----------------------------------- #
+    def swap_vocabulary(self, vocabulary: vocab_lib.Vocabulary) -> None:
+        """Swap the frozen vocabulary on every bucket (between steps)."""
+        for b in self.buckets:
+            b.transform.swap_vocabulary(vocabulary)
+
+    def compile_cache_size(self) -> int:
+        """Total compiled executables across buckets — the shape
+        discipline means this saturates at warmup and never grows."""
+        return sum(b.transform.compile_cache_size() for b in self.buckets)

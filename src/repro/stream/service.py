@@ -1,0 +1,350 @@
+"""Online streaming preprocessing service (Piper-as-a-service).
+
+The offline engines (``PiperPipeline`` / ``ShardedPiperPipeline``) are
+throughput-bound: two full passes over a finite dataset. This module is
+the *latency-bound* counterpart — the disaggregated preprocessing
+service of the tf.data-service deployment shape, serving the Piper
+operator chain in **frozen-vocab mode** (loop ② only) over a continuous
+request stream:
+
+  * **ingress** — a bounded queue; ``submit`` blocks when the service
+    falls behind (backpressure instead of unbounded memory growth);
+  * **micro-batching** — ``scheduler.MicroBatchScheduler`` coalesces
+    variable-size requests into bucketed fixed shapes so steady state
+    never recompiles;
+  * **double buffering** — one micro-batch is always in flight: the loop
+    dispatches batch *i* (async), then assembles/pads/uploads batch
+    *i+1* while *i* transforms, then blocks on *i*'s result to route it.
+    This generalizes ``data.loader.Prefetcher``'s produce/consume
+    overlap to the request/response path;
+  * **incremental vocab refresh** — loop ① keeps running somewhere
+    (another job, another shard set); its un-finalized
+    :class:`~repro.core.vocab.VocabState` deltas fold into the service's
+    state with the commutative-monoid ``vocab.merge`` and the
+    re-finalized vocabulary is swapped in **atomically between steps**,
+    so no request ever sees a half-updated table;
+  * **graceful drain/shutdown** — ``drain`` waits for every accepted
+    request; ``stop`` drains then joins the loop (idempotent).
+
+Determinism contract: for any interleaving of requests whose rows
+concatenate to a reference dataset, the per-request outputs reassemble
+to exactly ``PiperPipeline`` loop-②'s table (tests/test_stream_service.py),
+including across a mid-stream vocab refresh whose delta only appends
+later first-occurrences.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+
+from repro.core import pipeline as pipeline_lib
+from repro.core import vocab as vocab_lib
+from repro.stream import metrics as metrics_lib
+from repro.stream import scheduler as scheduler_lib
+
+
+class StreamingPreprocessService:
+    """Long-lived frozen-vocab preprocessing service.
+
+    Args:
+      config: the shared :class:`~repro.core.pipeline.PipelineConfig`
+        (``input_format`` selects utf8 vs binary requests; per-bucket
+        shape fields are overridden by the scheduler).
+      vocab_state: the **un-finalized** loop-① accumulator from an
+        offline run (``PiperPipeline.build_state_stream`` or
+        ``ShardedPiperPipeline.build_state_scan``). Kept un-finalized so
+        :meth:`refresh_vocab` can merge in deltas; the service finalizes
+        internally.
+      bucket_rows / bytes_per_row: scheduler capacities (see
+        :class:`~repro.stream.scheduler.MicroBatchScheduler`).
+      queue_depth: ingress bound — the backpressure knob.
+      poll_s: loop idle poll interval.
+    """
+
+    def __init__(
+        self,
+        config: pipeline_lib.PipelineConfig,
+        vocab_state: vocab_lib.VocabState,
+        bucket_rows: tuple[int, ...] = scheduler_lib.DEFAULT_BUCKET_ROWS,
+        bytes_per_row: int | None = None,
+        queue_depth: int = 64,
+        poll_s: float = 0.005,
+    ):
+        self.config = config
+        self._state = vocab_state
+        self.scheduler = scheduler_lib.MicroBatchScheduler(
+            config,
+            vocab_lib.finalize(vocab_state),
+            bucket_rows=bucket_rows,
+            bytes_per_row=bytes_per_row,
+        )
+        self.metrics = metrics_lib.ServiceMetrics()
+        self._ingress: queue.Queue = queue.Queue(maxsize=queue_depth)
+        self._carry: scheduler_lib.StreamRequest | None = None
+        self._pending_delta: vocab_lib.VocabState | None = None
+        self._vocab_lock = threading.Lock()
+        self._stop_evt = threading.Event()
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+        self._outstanding = 0
+        self._cond = threading.Condition()
+        self._poll_s = poll_s
+        # Serializes submit()'s check-then-put against stop()'s final
+        # ingress sweep, so no request can slip in behind the sweep and
+        # strand (its put either lands before the sweep or the stop flag
+        # is already visible to the check).
+        self._submit_lock = threading.Lock()
+
+    # ------------------------------------------------------------------ #
+    # lifecycle
+    # ------------------------------------------------------------------ #
+    def start(self) -> "StreamingPreprocessService":
+        if self._thread is not None:
+            raise RuntimeError("service already started")
+        self._thread = threading.Thread(
+            target=self._run, name="piper-stream-service", daemon=True
+        )
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Graceful shutdown: drain accepted requests, stop the loop.
+
+        Idempotent — safe to call twice or from ``finally`` blocks. Any
+        request that slipped into the ingress after the loop exited is
+        failed (never silently dropped)."""
+        self._stop_evt.set()
+        t, self._thread = self._thread, None
+        if t is not None:
+            t.join()
+        with self._submit_lock:
+            leftovers = []
+            if self._carry is not None:
+                leftovers.append(self._carry)
+                self._carry = None
+            while True:
+                try:
+                    leftovers.append(self._ingress.get_nowait())
+                except queue.Empty:
+                    break
+        self._fail_requests(
+            leftovers, RuntimeError("streaming service stopped before completion")
+        )
+
+    def __enter__(self) -> "StreamingPreprocessService":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ------------------------------------------------------------------ #
+    # client surface
+    # ------------------------------------------------------------------ #
+    def submit(self, payload, timeout: float | None = None) -> scheduler_lib.StreamRequest:
+        """Enqueue one request; returns its handle.
+
+        Blocks (up to ``timeout``) while the bounded ingress is full —
+        that *is* the backpressure: a producer outrunning the device is
+        slowed at submission instead of ballooning host memory.
+        """
+        if self._thread is None:
+            raise RuntimeError("service not started")
+        req = scheduler_lib.make_request(payload, self.config)
+        if not self.scheduler.admits(req):
+            raise ValueError(
+                f"request of {req.n_rows} rows / {req.n_bytes} bytes exceeds the "
+                f"largest bucket ({self.scheduler.max_rows} rows / "
+                f"{self.scheduler.max_bytes} bytes); route bulk jobs through the "
+                f"offline engines"
+            )
+        with self._submit_lock:
+            if self._stop_evt.is_set():
+                raise RuntimeError("streaming service is stopping")
+            if self._error is not None:
+                raise RuntimeError("streaming service failed") from self._error
+            with self._cond:
+                self._outstanding += 1
+            req.submit_t = time.perf_counter()
+            self.metrics.note_submit(req.submit_t)
+            try:
+                self._ingress.put(req, timeout=timeout)
+            except queue.Full:
+                with self._cond:
+                    self._outstanding -= 1
+                    self._cond.notify_all()  # a waiting drain() may now be done
+                raise
+        if self._error is not None:
+            # The loop died while (or right before) we enqueued: its
+            # ingress sweep may have missed this request — sweep again so
+            # nothing strands (double sweeps are harmless, gets are atomic).
+            doomed = []
+            while True:
+                try:
+                    doomed.append(self._ingress.get_nowait())
+                except queue.Empty:
+                    break
+            self._fail_requests(
+                doomed, RuntimeError("streaming service failed")
+            )
+        return req
+
+    def warmup(self, payloads) -> None:
+        """Run the payloads through (one per bucket capacity, typically),
+        compiling each bucket's executable, then reset metrics so the
+        steady-state numbers exclude compile time. Latency is recorded
+        before ``result()`` unblocks, so the reset cannot race a warmup
+        record into the fresh metrics."""
+        for p in payloads:
+            self.submit(p).result()
+        self.metrics = metrics_lib.ServiceMetrics()
+
+    def drain(self, timeout: float | None = None) -> None:
+        """Block until every accepted request has completed."""
+        with self._cond:
+            ok = self._cond.wait_for(
+                lambda: self._outstanding == 0 or self._error is not None,
+                timeout=timeout,
+            )
+        if self._error is not None:
+            raise RuntimeError("streaming service failed") from self._error
+        if not ok:
+            raise TimeoutError("drain timed out")
+
+    def refresh_vocab(self, delta_state: vocab_lib.VocabState) -> None:
+        """Fold a loop-① delta into the serving vocabulary.
+
+        Thread-safe and non-blocking: deltas accumulate under a lock via
+        the commutative-monoid ``vocab.merge`` and the service loop
+        applies them **between micro-batch steps** — finalize, then one
+        atomic swap across all bucket transforms. In-flight steps keep
+        the old table; no step ever mixes the two.
+        """
+        with self._vocab_lock:
+            if self._pending_delta is None:
+                self._pending_delta = delta_state
+            else:
+                self._pending_delta = vocab_lib.merge(self._pending_delta, delta_state)
+
+    @property
+    def vocab_state(self) -> vocab_lib.VocabState:
+        """The service's current merged loop-① state (refresh deltas not
+        yet applied by the loop are excluded)."""
+        return self._state
+
+    def compile_cache_size(self) -> int:
+        return self.scheduler.compile_cache_size()
+
+    # ------------------------------------------------------------------ #
+    # service loop
+    # ------------------------------------------------------------------ #
+    def _run(self) -> None:
+        inflight: tuple | None = None  # (MicroBatch, device ProcessedBatch)
+        nxt: tuple | None = None
+        gathered: list = []
+        try:
+            while True:
+                self._apply_pending_vocab()
+                # Only wait for ingress when idle: with a batch in flight
+                # an empty queue means "complete it now", not "poll" —
+                # polling would tax sparse-traffic latency by poll_s.
+                gathered = self._gather(block=inflight is None)
+                nxt = None
+                if gathered:
+                    batch = self.scheduler.assemble(gathered)
+                    # async dispatch: device starts on batch i+1's upload +
+                    # transform while we still hold batch i's futures
+                    nxt = (batch, self.scheduler.dispatch(batch))
+                    gathered = []
+                if inflight is not None:
+                    self._complete(*inflight)
+                    inflight = None
+                inflight = nxt
+                nxt = None
+                if (
+                    inflight is None
+                    and self._stop_evt.is_set()
+                    and self._carry is None
+                    and self._ingress.empty()
+                ):
+                    return
+        except BaseException as e:  # noqa: BLE001 — fail requests, don't hang
+            self._error = e
+            self._stop_evt.set()  # new submits refuse; stop() is a no-op join
+            doomed = list(gathered)
+            for item in (inflight, nxt):
+                if item is not None:
+                    doomed.extend(item[0].requests)
+            if self._carry is not None:
+                doomed.append(self._carry)
+                self._carry = None
+            while True:
+                try:
+                    doomed.append(self._ingress.get_nowait())
+                except queue.Empty:
+                    break
+            self._fail_requests(doomed, e)
+
+    def _fail_requests(self, requests, err: BaseException) -> None:
+        if not requests:
+            return
+        for r in requests:
+            r._fail(err)
+        with self._cond:
+            self._outstanding -= len(requests)
+            self._cond.notify_all()
+
+    def _apply_pending_vocab(self) -> None:
+        with self._vocab_lock:
+            delta, self._pending_delta = self._pending_delta, None
+        if delta is not None:
+            self._state = vocab_lib.merge(self._state, delta)
+            self.scheduler.swap_vocabulary(vocab_lib.finalize(self._state))
+
+    def _gather(self, block: bool) -> list:
+        """Coalesce queued requests FIFO up to the largest bucket.
+
+        A request that would overflow the current batch is *carried* to
+        the next step (FIFO order preserved — no starvation, mirroring
+        the serving engine's slot admission). ``block`` waits up to
+        ``poll_s`` for the first request; the loop passes False while a
+        batch is in flight."""
+        reqs: list = []
+        rows = nbytes = 0
+        if self._carry is not None:
+            r, self._carry = self._carry, None
+            reqs.append(r)
+            rows, nbytes = r.n_rows, r.n_bytes
+        while True:
+            try:
+                r = (
+                    self._ingress.get(timeout=self._poll_s)
+                    if block and not reqs
+                    else self._ingress.get_nowait()
+                )
+            except queue.Empty:
+                return reqs
+            if self.scheduler.fits(rows, nbytes, r):
+                reqs.append(r)
+                rows += r.n_rows
+                nbytes += r.n_bytes
+            else:
+                self._carry = r
+                return reqs
+
+    def _complete(self, batch, out) -> None:
+        """Route one finished step back to its requests + record metrics.
+
+        Latency is recorded *before* ``_finish`` unblocks the waiter, so
+        a caller that resets ``metrics`` right after ``result()`` returns
+        (e.g. :meth:`warmup`) can never lose or misplace a record."""
+        results = self.scheduler.route(batch, out)
+        now = time.perf_counter()
+        for req, res in zip(batch.requests, results):
+            req.done_t = now
+            self.metrics.record(now - req.submit_t, req.n_rows, now=now)
+            req._finish(res)
+        with self._cond:
+            self._outstanding -= len(batch.requests)
+            self._cond.notify_all()

@@ -60,6 +60,58 @@ def test_prefetcher_orders_batches():
         pf.stop()
 
 
+def test_prefetcher_propagates_batch_fn_error():
+    """A batch_fn exception must surface in get(), not hang the consumer
+    forever on a silently-dead daemon thread."""
+
+    def bad_fn(step):
+        if step >= 2:
+            raise ValueError("boom at step 2")
+        return {"x": np.zeros(1)}
+
+    pf = loader.Prefetcher(bad_fn, depth=1).start()
+    try:
+        got = []
+        with pytest.raises(RuntimeError, match="batch_fn failed") as ei:
+            for _ in range(5):
+                got.append(pf.get(timeout=5.0)[0])
+        assert got == [0, 1]
+        assert isinstance(ei.value.__cause__, ValueError)
+    finally:
+        pf.stop()
+
+
+def test_prefetcher_stop_idempotent():
+    fn = loader.TokenBatches(vocab_size=10, batch=1, seq=4, seed=0)
+    pf = loader.Prefetcher(fn, depth=2).start()
+    assert pf.get()[0] == 0
+    pf.stop()
+    pf.stop()  # second stop is a no-op, not an error
+
+
+def test_binary_chunk_feed_layouts():
+    """BinaryChunkFeed round-robin layout matches TabularChunkFeed's
+    chunk-order contract: flat_chunks order == shard_stacks reassembled."""
+    cfg = synth.SynthConfig(rows=100, seed=5)
+    table = synth.generate_binary(cfg)
+    feed = loader.BinaryChunkFeed(table, rows_per_chunk=16, n_row_shards=3)
+    flat = feed.flat_chunks()
+    chunks, offsets = feed.shard_stacks()
+    assert chunks["label"].shape[:2] == (3, feed.n_steps)
+    # reassemble shard-major back to chunk order
+    re = np.swapaxes(chunks["label"], 0, 1).reshape(-1, 16)
+    np.testing.assert_array_equal(re, flat["label"])
+    # valid rows, in chunk order, are exactly the table rows
+    v = flat["valid"].reshape(-1)
+    np.testing.assert_array_equal(flat["label"].reshape(-1)[v], table["label"])
+    np.testing.assert_array_equal(
+        flat["sparse"].reshape(-1, cfg.schema.n_sparse)[v], table["sparse"]
+    )
+    # offsets are the global first-row index per chunk
+    assert offsets[0, 0] == 0 and offsets[1, 0] == 16 and offsets[2, 0] == 32
+    assert offsets[0, 1] == 48  # chunk 3 → shard 0, step 1
+
+
 def test_piper_token_batches():
     sparse = np.arange(1000).reshape(-1, 4).astype(np.int32)
     fn = loader.PiperTokenBatches(sparse, vocab_size=50, batch=2, seq=16)

@@ -1,0 +1,264 @@
+"""Online streaming service: bit-identity with the offline engine,
+shape discipline (no steady-state recompiles), vocab refresh, lifecycle."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pipeline as P, schema as schema_lib, vocab as vocab_lib
+from repro.data import synth
+from repro.stream import StreamingPreprocessService, make_request
+from repro.stream import scheduler as scheduler_lib
+
+BUCKETS = (32, 128, 512)
+
+
+def _offline_reference(pipe, buf):
+    """Valid rows of the offline two-loop engine (the ground truth the
+    service's reassembled per-request outputs must match bit-for-bit)."""
+    lab, den, spa = [], [], []
+    for o in pipe.run_stream(lambda: synth.chunk_stream(buf, 16384)):
+        v = np.asarray(o.valid)
+        lab.append(np.asarray(o.label)[v])
+        den.append(np.asarray(o.dense)[v])
+        spa.append(np.asarray(o.sparse)[v])
+    return np.concatenate(lab), np.concatenate(den), np.concatenate(spa)
+
+
+def _random_splits(rng, total, max_size):
+    sizes, left = [], total
+    while left > 0:
+        n = int(min(rng.integers(1, max_size + 1), left))
+        sizes.append(n)
+        left -= n
+    return sizes
+
+
+def _submit_rows(svc, fmt, buf, table, spans, row0, n):
+    if fmt == "utf8":
+        return svc.submit(buf[spans[row0, 0] : spans[row0 + n - 1, 1]])
+    return svc.submit({k: table[k][row0 : row0 + n] for k in ("label", "dense", "sparse")})
+
+
+def _reassemble(handles):
+    outs = [h.result(timeout=60) for h in handles]
+    return (
+        np.concatenate([o["label"] for o in outs]),
+        np.concatenate([o["dense"] for o in outs]),
+        np.concatenate([o["sparse"] for o in outs]),
+    )
+
+
+# --------------------------------------------------------------------- #
+# bit-identity: any request interleaving reassembles to loop ②'s table
+# --------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("fmt", ["utf8", "binary"])
+def test_stream_reassembles_offline_table(criteo_small, fmt):
+    buf, table, cfg = criteo_small
+    pc = P.PipelineConfig(schema=cfg.schema, max_rows_per_chunk=256, input_format=fmt)
+    pipe = P.PiperPipeline(pc)
+
+    if fmt == "utf8":
+        state = pipe.build_state_stream(synth.chunk_stream(buf, 16384))
+        ref_pipe, ref_buf = pipe, buf
+    else:
+        chunk = {k: jnp.asarray(table[k]) for k in ("label", "dense", "sparse")}
+        state = pipe.build_state_stream([chunk])
+        # reference through the utf8 engine: binary serving must reproduce
+        # the Config I/II table exactly (binary ≡ utf8, online included)
+        ref_pipe = P.PiperPipeline(P.PipelineConfig(schema=cfg.schema, max_rows_per_chunk=256))
+        ref_buf = buf
+    ref_lab, ref_den, ref_spa = _offline_reference(ref_pipe, ref_buf)
+
+    spans = synth.row_spans(buf)
+    rng = np.random.default_rng(5)
+    rows = cfg.rows
+    svc = StreamingPreprocessService(pc, state, bucket_rows=BUCKETS, queue_depth=8)
+    with svc:
+        handles, row0 = [], 0
+        for n in _random_splits(rng, rows, 300):
+            handles.append(_submit_rows(svc, fmt, buf, table, spans, row0, n))
+            row0 += n
+        svc.drain(timeout=120)
+        lab, den, spa = _reassemble(handles)
+
+    np.testing.assert_array_equal(lab, ref_lab)
+    np.testing.assert_array_equal(spa, ref_spa)
+    np.testing.assert_array_equal(den, ref_den)  # bit-identical floats
+
+
+# --------------------------------------------------------------------- #
+# mid-stream incremental vocab refresh
+# --------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("fmt", ["utf8", "binary"])
+def test_mid_stream_vocab_refresh(criteo_small, fmt):
+    """Serve the first half on a half-built vocab, fold in the second
+    half's loop-① delta mid-stream, serve the rest: the reassembled table
+    equals the offline full-dataset run bit-for-bit (ordinals of values
+    already present never change — later first-occurrences only append)."""
+    buf, table, cfg = criteo_small
+    pc = P.PipelineConfig(schema=cfg.schema, max_rows_per_chunk=256, input_format=fmt)
+    pipe = P.PiperPipeline(pc)
+    ref_pipe = P.PiperPipeline(P.PipelineConfig(schema=cfg.schema, max_rows_per_chunk=256))
+    ref_lab, ref_den, ref_spa = _offline_reference(ref_pipe, buf)
+
+    rows = cfg.rows
+    half = rows // 2
+    spans = synth.row_spans(buf)
+
+    if fmt == "utf8":
+        first_chunks = list(synth.chunk_stream(buf[: spans[half - 1, 1]], 8192))
+        delta_chunks = list(synth.chunk_stream(buf[spans[half, 0] :], 8192))
+    else:
+        cols = ("label", "dense", "sparse")
+        first_chunks = [{k: jnp.asarray(table[k][:half]) for k in cols}]
+        delta_chunks = [{k: jnp.asarray(table[k][half:]) for k in cols}]
+
+    state_half = pipe.build_state_stream(first_chunks)
+    # loop-① delta over the second half with *global* row positions: seed
+    # rows_seen with the split offset, exactly how a follow-up offline job
+    # over new data would report its state
+    delta = vocab_lib.VocabState(
+        first_pos=pipe.init_state().first_pos, rows_seen=jnp.int32(half)
+    )
+    for chunk in delta_chunks:
+        delta = pipe.vocab_step(delta, jax.tree.map(jnp.asarray, chunk))
+
+    # the refresh genuinely grows the vocabulary (test is non-vacuous)
+    sizes_half = np.asarray(vocab_lib.finalize(state_half).sizes)
+    sizes_full = np.asarray(
+        vocab_lib.finalize(vocab_lib.merge(state_half, delta)).sizes
+    )
+    assert (sizes_full > sizes_half).any()
+
+    rng = np.random.default_rng(6)
+    svc = StreamingPreprocessService(pc, state_half, bucket_rows=BUCKETS, queue_depth=8)
+    with svc:
+        handles, row0 = [], 0
+        for n in _random_splits(rng, half, 200):
+            handles.append(_submit_rows(svc, fmt, buf, table, spans, row0, n))
+            row0 += n
+        svc.refresh_vocab(delta)
+        # wait for the between-steps atomic swap before feeding rows that
+        # contain second-half-only values
+        deadline = time.time() + 30
+        while svc.vocab_state is state_half:
+            assert time.time() < deadline, "vocab swap never applied"
+            time.sleep(0.002)
+        for n in _random_splits(rng, rows - half, 200):
+            handles.append(_submit_rows(svc, fmt, buf, table, spans, row0, n))
+            row0 += n
+        svc.drain(timeout=120)
+        lab, den, spa = _reassemble(handles)
+
+    np.testing.assert_array_equal(lab, ref_lab)
+    np.testing.assert_array_equal(spa, ref_spa)
+    np.testing.assert_array_equal(den, ref_den)
+
+
+# --------------------------------------------------------------------- #
+# scheduler shape discipline: no recompilation after warmup
+# --------------------------------------------------------------------- #
+
+
+def test_no_recompile_after_warmup(criteo_small):
+    buf, table, cfg = criteo_small
+    pc = P.PipelineConfig(schema=cfg.schema)
+    pipe = P.PiperPipeline(pc)
+    state = pipe.build_state_stream(synth.chunk_stream(buf, 16384))
+    spans = synth.row_spans(buf)
+    rows = cfg.rows
+
+    svc = StreamingPreprocessService(pc, state, bucket_rows=BUCKETS, queue_depth=8)
+    with svc:
+        # warmup: hit every bucket once
+        for cap in BUCKETS:
+            n = min(cap, rows)
+            _submit_rows(svc, "utf8", buf, table, spans, 0, n).result(timeout=60)
+        warm = svc.compile_cache_size()
+        assert warm == len(BUCKETS)  # exactly one executable per bucket
+
+        # steady state: randomized request sizes, every bucket exercised
+        rng = np.random.default_rng(7)
+        handles = []
+        for _ in range(40):
+            n = int(rng.integers(1, rows + 1))
+            handles.append(_submit_rows(svc, "utf8", buf, table, spans, 0, n))
+        svc.drain(timeout=120)
+        for h in handles:
+            assert h.result()["label"].shape[0] > 0
+        assert svc.compile_cache_size() == warm  # zero cache misses
+
+
+# --------------------------------------------------------------------- #
+# lifecycle: backpressure, drain, stop, admission errors
+# --------------------------------------------------------------------- #
+
+
+def test_backpressure_bounded_ingress(criteo_small):
+    buf, table, cfg = criteo_small
+    pc = P.PipelineConfig(schema=cfg.schema)
+    pipe = P.PiperPipeline(pc)
+    state = pipe.build_state_stream(synth.chunk_stream(buf, 16384))
+    spans = synth.row_spans(buf)
+
+    svc = StreamingPreprocessService(pc, state, bucket_rows=(32, 128), queue_depth=2)
+    with svc:
+        handles = [
+            _submit_rows(svc, "utf8", buf, table, spans, i * 4, 4) for i in range(50)
+        ]
+        svc.drain(timeout=120)
+        assert all(h.done for h in handles)
+        snap = svc.metrics.snapshot()
+    assert snap["requests"] == 50
+    assert snap["rows"] == 200
+    assert snap["rows_per_s"] > 0
+    assert snap["p99_ms"] >= snap["p50_ms"] >= 0
+
+
+def test_oversized_request_rejected(criteo_small):
+    buf, _, cfg = criteo_small
+    pc = P.PipelineConfig(schema=cfg.schema)
+    pipe = P.PiperPipeline(pc)
+    state = pipe.build_state_stream(synth.chunk_stream(buf, 16384))
+    spans = synth.row_spans(buf)
+    svc = StreamingPreprocessService(pc, state, bucket_rows=(32, 64), queue_depth=2)
+    with svc:
+        with pytest.raises(ValueError, match="largest bucket"):
+            svc.submit(buf[: spans[-1, 1]])  # 400 rows > 64-row max bucket
+    svc.stop()  # idempotent second stop
+
+
+def test_make_request_validation():
+    pc = P.PipelineConfig(schema=schema_lib.CRITEO)
+    with pytest.raises(ValueError, match="whole rows"):
+        make_request(np.frombuffer(b"1\t2\t3", np.uint8), pc)
+    pc_bin = P.PipelineConfig(schema=schema_lib.CRITEO, input_format="binary")
+    with pytest.raises(ValueError, match="schema"):
+        make_request(
+            {
+                "label": np.zeros(4, np.int32),
+                "dense": np.zeros((4, 3), np.int32),
+                "sparse": np.zeros((4, 26), np.int32),
+            },
+            pc_bin,
+        )
+
+
+def test_scheduler_bucket_selection():
+    pc = P.PipelineConfig(schema=schema_lib.CRITEO)
+    vocab = vocab_lib.finalize(vocab_lib.VocabState.init(26, 5000))
+    sched = scheduler_lib.MicroBatchScheduler(pc, vocab, bucket_rows=(32, 128, 512))
+    assert sched.select_bucket(1, 0).rows == 32
+    assert sched.select_bucket(32, 0).rows == 32
+    assert sched.select_bucket(33, 0).rows == 128
+    assert sched.select_bucket(512, 0).rows == 512
+    with pytest.raises(ValueError):
+        sched.select_bucket(513, 0)
