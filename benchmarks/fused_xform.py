@@ -1,0 +1,122 @@
+"""Fused single-pass loop-② kernel vs. the unfused op chain.
+
+Times the per-chunk transform both ways on the same device-resident
+batch, for both memory tiers (paper §3.2/§4.4.6):
+
+  * ``vmem`` — the paper's 5K vocab point: the fused Pallas kernel keeps
+    every column table resident in VMEM and the whole chain (Modulus →
+    ApplyVocab ∥ Neg2Zero → Logarithm) is one dispatch;
+  * ``hbm``  — the paper's 1M vocab point: modulus + dense transform
+    still fuse into one pass, the table lookup is an XLA gather against
+    the HBM-resident table.
+
+Output: the usual ``name,us_per_call,derived`` CSV rows plus one
+machine-readable JSON line per tier:
+
+    fused_json/{tier} {"rows": ..., "fused_rows_per_s": ...,
+                       "unfused_rows_per_s": ..., "speedup": ...}
+
+On CPU the kernels run ``interpret=True`` (the Pallas interpreter), so
+the absolute numbers measure plumbing, not silicon — the benchmark's
+job in CI is to keep the fused path's perf harness from rotting; on a
+TPU the same script reports the materialization win.
+
+    PYTHONPATH=src python benchmarks/fused_xform.py [--rows N]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+if __package__ in (None, ""):  # direct script invocation
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+    sys.path.insert(0, _ROOT)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import ops, schema as schema_lib, vocab as vocab_lib
+from repro.data import synth
+from repro.kernels.fused_xform import ops as fx_ops
+
+ROWS = 65_536
+# The paper's two evaluation points; 1M lands in the HBM tier on both
+# the per-column cutoff and the fused kernel's residency budget.
+TIER_SCHEMAS = {
+    "vmem": schema_lib.CRITEO,
+    "hbm": schema_lib.CRITEO_1M,
+}
+
+
+def run_tier(tier: str, rows: int) -> None:
+    schema = TIER_SCHEMAS[tier]
+    assert fx_ops.fused_tier(schema.n_sparse, schema.vocab_range) == tier
+    cfg = synth.SynthConfig(schema=schema, rows=rows, seed=3)
+    table = synth.generate_binary(cfg)
+    sparse = jnp.asarray(table["sparse"])
+    dense = jnp.asarray(table["dense"])
+
+    # Loop ① once (not timed) — both variants consume the same vocabulary.
+    state = vocab_lib.update(
+        vocab_lib.VocabState.init(schema.n_sparse, schema.vocab_range),
+        ops.positive_modulus(sparse, schema.vocab_range),
+        jnp.ones(rows, bool),
+    )
+    vocabulary = vocab_lib.finalize(state)
+
+    fused = jax.jit(lambda s, d: ops.fused_transform(vocabulary, s, d))
+    # use_kernel=False composes the real unfused chain — the same oracle
+    # the differential tests hold the kernel to.
+    unfused = jax.jit(
+        lambda s, d: ops.fused_transform(vocabulary, s, d, use_kernel=False)
+    )
+
+    # Differential guard: a benchmark that drifts from the oracle would
+    # report a meaningless speedup.
+    ids_f, den_f = fused(sparse, dense)
+    ids_u, den_u = unfused(sparse, dense)
+    np.testing.assert_array_equal(np.asarray(ids_f), np.asarray(ids_u))
+    np.testing.assert_allclose(np.asarray(den_f), np.asarray(den_u), rtol=1e-6)
+
+    t_fused = time_fn(fused, sparse, dense)
+    t_unfused = time_fn(unfused, sparse, dense)
+    fused_rps = rows / t_fused
+    unfused_rps = rows / t_unfused
+    speedup = t_unfused / t_fused
+    emit(
+        f"fused/{tier}",
+        t_fused,
+        f"rows_per_s={fused_rps:.0f};unfused_rows_per_s={unfused_rps:.0f};"
+        f"speedup={speedup:.3f};rows={rows}",
+    )
+    print(
+        f"fused_json/{tier} "
+        + json.dumps(
+            {
+                "rows": rows,
+                "vocab_range": schema.vocab_range,
+                "fused_rows_per_s": round(fused_rps),
+                "unfused_rows_per_s": round(unfused_rps),
+                "speedup": round(speedup, 4),
+            }
+        )
+    )
+
+
+def main(rows: int = ROWS) -> None:
+    for tier in ("vmem", "hbm"):
+        run_tier(tier, rows)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rows", type=int, default=ROWS)
+    args = ap.parse_args()
+    main(rows=args.rows)

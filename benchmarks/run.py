@@ -17,6 +17,7 @@ from benchmarks import (
     fig8_cpu_scaling,
     fig9_end2end,
     fig10_breakdown,
+    fused_xform,
     stream_service,
     table3_throughput,
     table4_operators,
@@ -34,6 +35,8 @@ SECTIONS = {
     "fig10": fig10_breakdown.main,
     # online streaming preprocessing service: rows/s + p50/p95/p99 latency
     "stream": stream_service.main,
+    # fused single-pass loop-② kernel vs unfused chain, both memory tiers
+    "fused": fused_xform.main,
 }
 
 # Sections that force multi-device XLA state and would perturb the

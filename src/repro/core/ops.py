@@ -2,7 +2,9 @@
 
 Each operator is a pure jnp function; ``apply_vocab``/``dense_transform``
 optionally dispatch to the Pallas kernels (kernels/vocab,
-kernels/dense_xform) following the paper's SRAM-vs-HBM placement policy.
+kernels/dense_xform) following the paper's SRAM-vs-HBM placement policy,
+and ``fused_transform`` collapses the whole loop-② chain into one
+dispatch (kernels/fused_xform — Piper's on-chip dataflow).
 ``Decode`` and ``FillMissing`` live in kernels/decode_utf8 (FillMissing is
 folded into Decode, as on the FPGA). ``Hex2Int`` needs no explicit op —
 the decoder already produces integers, mirroring the paper's observation
@@ -44,6 +46,34 @@ def dense_transform(dense: jnp.ndarray, use_kernel: bool = False) -> jnp.ndarray
 
         return dx_ops.dense_transform(dense)
     return logarithm(neg2zero(dense.astype(jnp.float32)))
+
+
+def fused_transform(
+    vocab: vocab_lib.Vocabulary,
+    sparse: jnp.ndarray,
+    dense: jnp.ndarray,
+    use_kernel: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Whole loop-② chain — Modulus → ApplyVocab ∥ Neg2Zero → Logarithm —
+    as ONE dispatch (paper §3.2/§4.4: the row streams through the entire
+    operator graph on-chip, no per-op materialization).
+
+    With ``use_kernel`` the chain runs through the fused Pallas kernel
+    (kernels/fused_xform), tier-routed: tables within the VMEM budget
+    stay resident on-chip for the whole call; larger tables fall back to
+    a fused modulus+dense pass plus an XLA gather. Without it, the
+    unfused ops above compose — same results (ids bit-identical, dense
+    identical formula), used as the differential oracle.
+
+    sparse int32 [rows, n_sparse] (raw hash bitcasts); dense [rows, n_dense]
+    → (ids int32 [rows, n_sparse], dense float32 [rows, n_dense]).
+    """
+    if use_kernel:
+        from repro.kernels.fused_xform import ops as fx_ops
+
+        return fx_ops.fused_transform(vocab, sparse, dense)
+    modded = positive_modulus(sparse, vocab.vocab_range)
+    return apply_vocab(vocab, modded), dense_transform(dense)
 
 
 def apply_vocab(

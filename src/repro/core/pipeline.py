@@ -17,6 +17,13 @@ Two execution styles:
 The per-chunk operator chain matches Figure 5:
     LoadData → Decode(+FillMissing) → [sparse: Modulus → GenVocab →
     ApplyVocab] ∥ [dense: Neg2Zero → Logarithm] → StoreData
+
+Loop ②'s chain can run as ONE fused Pallas dispatch
+(``PipelineConfig.use_fused_kernel``, kernels/fused_xform): the row tile
+streams through Modulus → ApplyVocab ∥ Neg2Zero → Logarithm entirely
+on-chip, the paper's no-intermediate-materialization dataflow. Default
+(None) auto-enables it wherever Pallas compiles (TPU backend); the
+unfused per-op chain remains the differential oracle (knob False).
 """
 
 from __future__ import annotations
@@ -44,10 +51,32 @@ class PipelineConfig:
     input_format: str = "utf8"
     # Route hot ops through the Pallas kernels (interpret=True on CPU).
     use_kernels: bool = False
+    # Loop ②'s chain (Modulus → ApplyVocab ∥ Neg2Zero → Logarithm) as one
+    # fused Pallas dispatch instead of per-op calls with HBM round-trips
+    # between them (kernels/fused_xform). None = auto: on when Pallas is
+    # available *compiled* — i.e. the toolchain imports and the default
+    # backend is TPU. On CPU Pallas only interprets (slower than the
+    # XLA-fused unfused chain), so auto resolves off there and the fused
+    # path is opt-in via True — the same reason `use_kernels` defaults
+    # False. Outputs are bit-identical on sparse ids and allclose (same
+    # f32 formula) on dense vs. the unfused chain either way.
+    use_fused_kernel: bool | None = None
 
     def __post_init__(self):
         if self.input_format not in ("utf8", "binary"):
             raise ValueError(f"unknown input_format: {self.input_format}")
+
+    @property
+    def fused_enabled(self) -> bool:
+        """The resolved ``use_fused_kernel`` knob (None → on iff the
+        Pallas toolchain imports and it compiles on this backend)."""
+        if self.use_fused_kernel is None:
+            import jax
+
+            from repro import kernels as kernels_lib
+
+            return kernels_lib.pallas_available() and jax.default_backend() == "tpu"
+        return self.use_fused_kernel
 
 
 class PiperPipeline:
@@ -162,13 +191,20 @@ class PiperPipeline:
         self, vocabulary: vocab_lib.Vocabulary, chunk
     ) -> schema_lib.ProcessedBatch:
         batch = self._as_batch(chunk)
-        modded = ops.positive_modulus(batch.sparse, self.schema.vocab_range)
-        sparse_ids = ops.apply_vocab(
-            vocabulary, modded, use_kernel=self.config.use_kernels
-        )
-        dense = ops.dense_transform(
-            batch.dense, use_kernel=self.config.use_kernels
-        )
+        if self.config.fused_enabled:
+            # Piper's dataflow: the whole chain in one on-chip pass —
+            # no modded/ids/dense intermediates round-tripping HBM.
+            sparse_ids, dense = ops.fused_transform(
+                vocabulary, batch.sparse, batch.dense
+            )
+        else:
+            modded = ops.positive_modulus(batch.sparse, self.schema.vocab_range)
+            sparse_ids = ops.apply_vocab(
+                vocabulary, modded, use_kernel=self.config.use_kernels
+            )
+            dense = ops.dense_transform(
+                batch.dense, use_kernel=self.config.use_kernels
+            )
         return schema_lib.ProcessedBatch(
             label=batch.label, dense=dense, sparse=sparse_ids, valid=batch.valid
         )

@@ -53,6 +53,10 @@ class ShardedPiperPipeline:
         single-device engine takes (schema, chunk geometry, input format,
         kernel routing — all honored unchanged; the per-shard work is
         delegated to an inner :class:`~repro.core.pipeline.PiperPipeline`).
+        In particular ``use_fused_kernel`` applies per shard: each
+        shard's loop ② runs the fused single-pass Pallas chain
+        (kernels/fused_xform) inside its ``shard_map`` body, so the
+        data-parallel deployment keeps the on-chip dataflow too.
       mesh: a mesh whose row axes (``'data'``, optionally ``'pod'``) carry
         the shard dimension. Axes other than the row axes are ignored —
         chunks and state are not partitioned over them.

@@ -3,3 +3,22 @@
 #   kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling
 #   ops.py    — jit'd public wrapper (tier/strategy selection, fallbacks)
 #   ref.py    — pure-jnp oracle
+
+from __future__ import annotations
+
+import functools
+
+
+@functools.cache
+def pallas_available() -> bool:
+    """Whether the jax.experimental.pallas toolchain imports on this
+    install. One of the gates for defaults that route through kernels
+    (``PipelineConfig.use_fused_kernel=None`` → auto additionally
+    requires a TPU backend, where Pallas compiles instead of
+    interpreting): a jax build without Pallas falls back to the
+    pure-jnp op chain instead of failing at trace time."""
+    try:
+        import jax.experimental.pallas  # noqa: F401
+    except Exception:  # pragma: no cover — bare installs only
+        return False
+    return True

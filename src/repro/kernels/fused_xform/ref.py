@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the fused loop-② transform.
+
+Exactly the unfused op chain the fused kernel replaces:
+``positive_modulus`` → table gather (``vocab.lookup`` semantics) →
+``dense_transform``. The differential tests (tests/test_fused_xform.py)
+hold the kernel to this oracle bit-for-bit on the sparse ids and to
+rtol 1e-6 on the dense floats.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def fused_transform(
+    table: jnp.ndarray, sparse: jnp.ndarray, dense: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """table [n_sparse, V]; sparse int32 [rows, n_sparse]; dense [rows, n_dense]
+    → (ids int32 [rows, n_sparse], dense float32 [rows, n_dense])."""
+    vocab_range = table.shape[1]
+    u = jax.lax.bitcast_convert_type(sparse, jnp.uint32)
+    modded = (u % jnp.uint32(vocab_range)).astype(jnp.int32)
+    cols = jnp.arange(sparse.shape[1], dtype=jnp.int32)[None, :]
+    ids = table[jnp.broadcast_to(cols, modded.shape), modded]
+    dense_out = jnp.log1p(jnp.maximum(dense.astype(jnp.float32), 0.0))
+    return ids, dense_out

@@ -51,7 +51,12 @@ class StreamingPreprocessService:
     Args:
       config: the shared :class:`~repro.core.pipeline.PipelineConfig`
         (``input_format`` selects utf8 vs binary requests; per-bucket
-        shape fields are overridden by the scheduler).
+        shape fields are overridden by the scheduler). The
+        ``use_fused_kernel`` knob is inherited unchanged: every bucket's
+        :class:`~repro.core.pipeline.FrozenVocabTransform` runs loop ②
+        as the fused single-pass Pallas chain when it is on, so the
+        online path gets the same no-materialization dataflow as the
+        offline engines.
       vocab_state: the **un-finalized** loop-① accumulator from an
         offline run (``PiperPipeline.build_state_stream`` or
         ``ShardedPiperPipeline.build_state_scan``). Kept un-finalized so

@@ -20,21 +20,29 @@ from repro.data import synth
     seed=st.integers(0, 1 << 30),
     vocab_range=st.sampled_from([7, 97, 5000]),
     chunk_kb=st.sampled_from([4, 16]),
+    fused=st.booleans(),
 )
-def test_pipeline_equals_oracle_property(rows, seed, vocab_range, chunk_kb):
-    """∀ random tables: columnar two-loop == row-wise oracle, any chunking."""
+def test_pipeline_equals_oracle_property(rows, seed, vocab_range, chunk_kb, fused):
+    """∀ random tables: columnar two-loop == row-wise oracle, any chunking,
+    through both the fused single-pass kernel and the unfused op chain."""
     schema = schema_lib.TableSchema(vocab_range=vocab_range)
     cfg = synth.SynthConfig(schema=schema, rows=rows, seed=seed, sparse_pool=256)
     buf, _ = synth.make_dataset(cfg)
     oracle = baseline.run_pipeline(buf, schema, n_threads=3)
     pipe = P.PiperPipeline(
-        P.PipelineConfig(schema=schema, max_rows_per_chunk=256)
+        P.PipelineConfig(
+            schema=schema, max_rows_per_chunk=256, use_fused_kernel=fused
+        )
     )
     outs = list(pipe.run_stream(lambda: synth.chunk_stream(buf, chunk_kb << 10)))
     spa = np.concatenate(
         [np.asarray(o.sparse)[np.asarray(o.valid)] for o in outs]
     )
     np.testing.assert_array_equal(spa, oracle["sparse"])
+    den = np.concatenate(
+        [np.asarray(o.dense)[np.asarray(o.valid)] for o in outs]
+    )
+    np.testing.assert_allclose(den, oracle["dense"], rtol=1e-6)
 
 
 @settings(max_examples=30, deadline=None)
