@@ -2,7 +2,10 @@
 
 Every benchmark prints ``name,us_per_call,derived`` CSV rows (the
 contract of benchmarks/run.py); ``derived`` carries the table-specific
-figure (rows/s, speedup, ...).
+figure (rows/s, speedup, ...). ``emit`` additionally appends each row to
+the in-process :data:`RECORDS` ledger so drivers (benchmarks/run.py) can
+dump a machine-readable ``BENCH_plan.json`` next to the CSV — the perf
+trajectory is tracked, not just printed.
 """
 
 from __future__ import annotations
@@ -11,6 +14,26 @@ import time
 from typing import Callable
 
 import jax
+
+# Every emit() lands here as {"name", "us_per_call", "derived": {...}} —
+# derived "k=v;k=v" strings are split into typed fields. Drivers slice
+# this ledger per section and serialize it (see benchmarks/run.py).
+RECORDS: list[dict] = []
+
+
+def _parse_derived(derived: str) -> dict | str:
+    if "=" not in derived:
+        return derived
+    out: dict = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k] = int(v) if v.lstrip("-").isdigit() else float(v)
+        except ValueError:
+            out[k] = v
+    return out
 
 
 def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
@@ -45,4 +68,11 @@ def time_host(fn: Callable, *args, warmup: int = 0, iters: int = 3) -> float:
 
 
 def emit(name: str, seconds: float, derived: str) -> None:
+    RECORDS.append(
+        {
+            "name": name,
+            "us_per_call": round(seconds * 1e6, 1),
+            "derived": _parse_derived(derived),
+        }
+    )
     print(f"{name},{seconds * 1e6:.1f},{derived}")

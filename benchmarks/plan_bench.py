@@ -1,0 +1,155 @@
+"""Compiled-plan vs legacy-path loop-② throughput (+ a crossed plan).
+
+Three measurements on the same device-resident Criteo-shaped batch:
+
+  * ``plan/criteo_compiled``  — ``plan.criteo_default()`` through the plan
+    compiler, exactly what every engine now executes;
+  * ``plan/criteo_legacy``    — the pre-IR hand-inlined chain
+    (``positive_modulus → apply_vocab ∥ dense_transform``, or one
+    ``ops.fused_transform`` dispatch when fused), reconstructed here as
+    the reference. Outputs are **asserted** bit-for-bit against the
+    compiled plan; throughput is **reported** as ``speedup_vs_legacy``
+    (the compiler's gathers/subsets/assembly are identity no-ops for the
+    default plan, so the ratio should hover around 1.0 — it is tracked
+    in BENCH_plan.json rather than asserted, because wall-clock on
+    shared CI runners is too noisy for a hard gate);
+  * ``plan/crossed_compiled`` — a non-Criteo plan (two HashCross columns +
+    one bucketized dense) through the same compiler, the scenario the IR
+    opens. Reported as absolute rows/s plus overhead vs the Criteo plan.
+
+Output: ``name,us_per_call,derived`` CSV rows plus one machine-readable
+JSON line per variant (``plan_json/<name> {...}``); under
+``benchmarks/run.py`` the rows also land in ``BENCH_plan.json``.
+
+    PYTHONPATH=src python benchmarks/plan_bench.py [--rows N]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+if __package__ in (None, ""):  # direct script invocation
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+    sys.path.insert(0, _ROOT)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import ops, pipeline as pipeline_lib, plan as plan_lib
+from repro.core import schema as schema_lib
+from repro.core import vocab as vocab_lib
+from repro.data import synth
+
+ROWS = 65_536
+
+
+def _batch(schema: schema_lib.TableSchema, rows: int) -> schema_lib.TabularBatch:
+    table = synth.generate_binary(synth.SynthConfig(schema=schema, rows=rows, seed=11))
+    return schema_lib.TabularBatch(
+        label=jnp.asarray(table["label"]),
+        dense=jnp.asarray(table["dense"]),
+        sparse=jnp.asarray(table["sparse"]),
+        valid=jnp.ones(rows, bool),
+    )
+
+
+def _legacy_transform(pipe: pipeline_lib.PiperPipeline):
+    """The pre-IR hand-inlined loop-② chain (what transform_chunk did
+    before the plan compiler existed) — the baseline the compiled plan
+    must not regress."""
+    cfg = pipe.config
+
+    def legacy(vocabulary, batch):
+        if cfg.fused_enabled:
+            ids, dense = ops.fused_transform(vocabulary, batch.sparse, batch.dense)
+        else:
+            modded = ops.positive_modulus(batch.sparse, cfg.schema.vocab_range)
+            ids = ops.apply_vocab(vocabulary, modded, use_kernel=cfg.use_kernels)
+            dense = ops.dense_transform(batch.dense, use_kernel=cfg.use_kernels)
+        return schema_lib.ProcessedBatch(
+            label=batch.label, dense=dense, sparse=ids, valid=batch.valid
+        )
+
+    return jax.jit(legacy)
+
+
+def _emit(name: str, seconds: float, rows: int, extra: dict) -> None:
+    rps = rows / seconds
+    derived = ";".join(
+        [f"rows_per_s={rps:.0f}"] + [f"{k}={v}" for k, v in extra.items()]
+    )
+    emit(f"plan/{name}", seconds, derived)
+    print(
+        f"plan_json/{name} "
+        + json.dumps({"rows": rows, "rows_per_s": round(rps), **extra})
+    )
+
+
+def main(rows: int = ROWS) -> None:
+    schema = schema_lib.CRITEO
+    batch = _batch(schema, rows)
+
+    # -- Criteo plan: compiled vs legacy ------------------------------- #
+    cfg = pipeline_lib.PipelineConfig(schema=schema, input_format="binary")
+    pipe = pipeline_lib.PiperPipeline(cfg)
+    state = jax.block_until_ready(
+        jax.jit(lambda b: pipe.compiled.vocab_step(pipe.init_state(), b))(batch)
+    )
+    vocabulary = vocab_lib.finalize(state)
+
+    compiled_fn = jax.jit(pipe.compiled.transform)
+    legacy_fn = _legacy_transform(pipe)
+
+    # Differential guard: a compiled plan that drifts from the legacy
+    # chain would make the ratio below meaningless.
+    out_c = compiled_fn(vocabulary, batch)
+    out_l = legacy_fn(vocabulary, batch)
+    np.testing.assert_array_equal(np.asarray(out_c.sparse), np.asarray(out_l.sparse))
+    np.testing.assert_allclose(
+        np.asarray(out_c.dense), np.asarray(out_l.dense), rtol=1e-6
+    )
+
+    t_legacy = time_fn(legacy_fn, vocabulary, batch)
+    t_compiled = time_fn(compiled_fn, vocabulary, batch)
+    ratio = t_legacy / t_compiled
+    _emit("criteo_legacy", t_legacy, rows, {"fused": cfg.fused_enabled})
+    _emit(
+        "criteo_compiled",
+        t_compiled,
+        rows,
+        {"fused": cfg.fused_enabled, "speedup_vs_legacy": round(ratio, 4)},
+    )
+
+    # -- crossed-feature plan (the scenario the IR opens) -------------- #
+    crossed = plan_lib.crossed_criteo(schema, crosses=((0, 1), (2, 3)))
+    xcfg = pipeline_lib.PipelineConfig(
+        schema=schema, input_format="binary", plan=crossed
+    )
+    xpipe = pipeline_lib.PiperPipeline(xcfg)
+    xstate = jax.jit(lambda b: xpipe.compiled.vocab_step(xpipe.init_state(), b))(batch)
+    xvocab = vocab_lib.finalize(jax.block_until_ready(xstate))
+    crossed_fn = jax.jit(xpipe.compiled.transform)
+    t_crossed = time_fn(crossed_fn, xvocab, batch)
+    _emit(
+        "crossed_compiled",
+        t_crossed,
+        rows,
+        {
+            "n_sparse_out": xpipe.compiled.n_sparse_out,
+            "overhead_vs_criteo": round(t_crossed / t_compiled, 4),
+        },
+    )
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rows", type=int, default=ROWS)
+    args = ap.parse_args()
+    main(rows=args.rows)

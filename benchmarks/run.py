@@ -1,23 +1,30 @@
 """Benchmark driver: one section per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows. The roofline section reads
-the dry-run artifacts when present (run ``python -m repro.launch.dryrun
---all --mesh both`` first for the full table).
+Prints ``name,us_per_call,derived`` CSV rows and, after every run, dumps
+the same measurements machine-readably to ``BENCH_plan.json`` (section →
+rows with ``us_per_call`` + parsed derived fields such as rows/s) so the
+perf trajectory is diffable across commits, not just eyeballable. The
+roofline section reads the dry-run artifacts when present (run ``python
+-m repro.launch.dryrun --all --mesh both`` first for the full table).
 
     PYTHONPATH=src python -m benchmarks.run [--only fig8,table3,...]
+                                           [--json-out BENCH_plan.json]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
 from benchmarks import (
+    common,
     fig8_cpu_scaling,
     fig9_end2end,
     fig10_breakdown,
     fused_xform,
+    plan_bench,
     stream_service,
     table3_throughput,
     table4_operators,
@@ -37,6 +44,8 @@ SECTIONS = {
     "stream": stream_service.main,
     # fused single-pass loop-② kernel vs unfused chain, both memory tiers
     "fused": fused_xform.main,
+    # compiled-plan vs legacy loop-② throughput + a crossed-feature plan
+    "plan": plan_bench.main,
 }
 
 # Sections that force multi-device XLA state and would perturb the
@@ -48,6 +57,11 @@ OPT_IN = {"fig8_sharded"}
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated section names")
+    ap.add_argument(
+        "--json-out",
+        default="BENCH_plan.json",
+        help="machine-readable dump path ('' disables)",
+    )
     args = ap.parse_args()
     names = (
         args.only.split(",")
@@ -57,25 +71,38 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failures = []
+    sections: dict[str, list[dict]] = {}
     for name in names:
         if name == "roofline":
             continue
+        mark = len(common.RECORDS)
         try:
             SECTIONS[name]()
         except Exception as e:  # noqa: BLE001
             failures.append(name)
             traceback.print_exc()
             print(f"{name}/ERROR,0,{type(e).__name__}")
+        sections[name] = common.RECORDS[mark:]
 
-    # roofline: best-effort (requires dry-run artifacts)
+    # roofline: best-effort (requires dry-run artifacts); runs before the
+    # JSON dump so its rows land in the machine-readable file too
+    mark = len(common.RECORDS)
     try:
         from benchmarks import roofline
 
         print("\n=== §Roofline (from dry-run artifacts) ===")
         roofline.main()
+        sections["roofline"] = common.RECORDS[mark:]
     except Exception:  # noqa: BLE001
         traceback.print_exc()
         print("roofline/SKIPPED (run the dry-run first)")
+
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(
+                {"sections": sections, "failures": failures}, f, indent=2
+            )
+        print(f"# wrote {args.json_out} ({sum(map(len, sections.values()))} rows)")
 
     if failures:
         sys.exit(1)

@@ -39,6 +39,44 @@ def logarithm(dense: jnp.ndarray) -> jnp.ndarray:
     return jnp.log1p(dense.astype(jnp.float32))
 
 
+def clip(dense: jnp.ndarray, lo: float, hi: float) -> jnp.ndarray:
+    """Clip: clamp dense features to ``[lo, hi]`` (f32)."""
+    return jnp.clip(dense.astype(jnp.float32), lo, hi)
+
+
+def minmax_scale(dense: jnp.ndarray, lo: float, hi: float) -> jnp.ndarray:
+    """MinMaxScale: clip to ``[lo, hi]``, rescale to ``[0, 1]``."""
+    return (clip(dense, lo, hi) - lo) / (hi - lo)
+
+
+def bucketize(dense: jnp.ndarray, boundaries: tuple[float, ...]) -> jnp.ndarray:
+    """Bucketize: value → f32 bucket index against strictly-increasing
+    static ``boundaries``; ``x == boundary`` lands in the upper bucket
+    (``side="right"``), so indices span ``[0, len(boundaries)]``."""
+    edges = jnp.asarray(boundaries, jnp.float32)
+    idx = jnp.searchsorted(edges, dense.astype(jnp.float32), side="right")
+    return idx.astype(jnp.float32)
+
+
+def hash_cross(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """HashCross: mix two raw sparse hash columns into one synthetic column.
+
+    Murmur3-style finalizer on the uint32 views (the decoder stores hashes
+    as int32 bitcasts, like ``positive_modulus``): multiply-rotate-xor so
+    the cross distributes over the modulus range even when the inputs
+    share low bits. Returns the int32 bitcast of the mixed uint32, i.e. a
+    raw hash column shaped exactly like a decoded sparse column — feed it
+    ``Modulus → GenVocab → ApplyVocab`` like any other.
+    """
+    ua = jax.lax.bitcast_convert_type(a, jnp.uint32)
+    ub = jax.lax.bitcast_convert_type(b, jnp.uint32)
+    h = ua * jnp.uint32(0x85EBCA6B)
+    h = h ^ ((ub << jnp.uint32(13)) | (ub >> jnp.uint32(19)))  # rotl(b, 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> jnp.uint32(16))
+    return jax.lax.bitcast_convert_type(h, jnp.int32)
+
+
 def dense_transform(dense: jnp.ndarray, use_kernel: bool = False) -> jnp.ndarray:
     """Fused Neg2Zero + Logarithm (one VMEM pass on TPU)."""
     if use_kernel:

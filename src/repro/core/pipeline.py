@@ -14,16 +14,25 @@ Two execution styles:
   * ``*_scan``    — device-driven: all chunks stacked in one array, looped
     with ``lax.scan`` (fully jitted; used for benchmarks and the dry-run).
 
-The per-chunk operator chain matches Figure 5:
+The per-chunk operator chain is **plan-driven**: ``PipelineConfig.plan``
+holds a declarative :class:`~repro.core.plan.PreprocPlan` (default:
+``plan.criteo_default`` — exactly Figure 5's
     LoadData → Decode(+FillMissing) → [sparse: Modulus → GenVocab →
     ApplyVocab] ∥ [dense: Neg2Zero → Logarithm] → StoreData
+) which ``plan_compiler.compile_plan`` validates, groups by op-chain
+signature, and tier-routes into one :class:`~repro.core.plan_compiler.
+CompiledPlan`. The engine only ever executes the compiled plan's two
+halves — ``vocab_step`` (loop ①) and ``transform`` (loop ②) — so
+arbitrary per-column recipes (crossed features, bucketized dense,
+non-Criteo schemas) run through the same machinery.
 
-Loop ②'s chain can run as ONE fused Pallas dispatch
-(``PipelineConfig.use_fused_kernel``, kernels/fused_xform): the row tile
-streams through Modulus → ApplyVocab ∥ Neg2Zero → Logarithm entirely
-on-chip, the paper's no-intermediate-materialization dataflow. Default
-(None) auto-enables it wherever Pallas compiles (TPU backend); the
-unfused per-op chain remains the differential oracle (knob False).
+Loop ②'s canonical groups can run as ONE fused Pallas dispatch
+(``PipelineConfig.use_fused_kernel`` — a compiler hint, resolved by
+``kernels.resolve_fused``; kernels/fused_xform): the row tile streams
+through Modulus → ApplyVocab ∥ Neg2Zero → Logarithm entirely on-chip,
+the paper's no-intermediate-materialization dataflow. Default (None)
+auto-enables it wherever Pallas compiles (TPU backend); the unfused
+per-op chain remains the differential oracle (knob False).
 """
 
 from __future__ import annotations
@@ -35,7 +44,8 @@ from typing import Iterable, Iterator
 import jax
 import jax.numpy as jnp
 
-from repro.core import ops
+from repro.core import plan as plan_lib
+from repro.core import plan_compiler
 from repro.core import schema as schema_lib
 from repro.core import vocab as vocab_lib
 
@@ -51,9 +61,10 @@ class PipelineConfig:
     input_format: str = "utf8"
     # Route hot ops through the Pallas kernels (interpret=True on CPU).
     use_kernels: bool = False
-    # Loop ②'s chain (Modulus → ApplyVocab ∥ Neg2Zero → Logarithm) as one
-    # fused Pallas dispatch instead of per-op calls with HBM round-trips
-    # between them (kernels/fused_xform). None = auto: on when Pallas is
+    # COMPILER HINT — canonical loop-② groups (Modulus → ApplyVocab ∥
+    # Neg2Zero → Logarithm) as one fused Pallas dispatch instead of
+    # per-op calls with HBM round-trips between them (kernels/fused_xform).
+    # None = auto via `kernels.resolve_fused()`: on when Pallas is
     # available *compiled* — i.e. the toolchain imports and the default
     # backend is TPU. On CPU Pallas only interprets (slower than the
     # XLA-fused unfused chain), so auto resolves off there and the fused
@@ -61,6 +72,11 @@ class PipelineConfig:
     # False. Outputs are bit-identical on sparse ids and allclose (same
     # f32 formula) on dense vs. the unfused chain either way.
     use_fused_kernel: bool | None = None
+    # The declarative per-column preprocessing program (core/plan.py).
+    # None = `plan.criteo_default(schema)` — the paper's exact chain, so
+    # every pre-IR call site keeps its behavior bit-for-bit. Compiled once
+    # per engine by `plan_compiler.compile_plan`.
+    plan: plan_lib.PreprocPlan | None = None
 
     def __post_init__(self):
         if self.input_format not in ("utf8", "binary"):
@@ -68,23 +84,37 @@ class PipelineConfig:
 
     @property
     def fused_enabled(self) -> bool:
-        """The resolved ``use_fused_kernel`` knob (None → on iff the
-        Pallas toolchain imports and it compiles on this backend)."""
+        """The resolved ``use_fused_kernel`` hint (None → on iff the
+        Pallas toolchain imports and it compiles on this backend —
+        ``kernels.resolve_fused``)."""
         if self.use_fused_kernel is None:
-            import jax
-
             from repro import kernels as kernels_lib
 
-            return kernels_lib.pallas_available() and jax.default_backend() == "tpu"
+            return kernels_lib.resolve_fused()
         return self.use_fused_kernel
+
+    def resolved_plan(self) -> plan_lib.PreprocPlan:
+        """The plan this config executes (None → the Criteo default)."""
+        return self.plan if self.plan is not None else plan_lib.criteo_default(self.schema)
 
 
 class PiperPipeline:
-    """Two-loop columnar preprocessing engine."""
+    """Two-loop columnar preprocessing engine (executes a CompiledPlan)."""
 
     def __init__(self, config: PipelineConfig):
         self.config = config
         self.schema = config.schema
+        self.plan = config.resolved_plan()
+        # The plan is compiled once per engine; both loops below only ever
+        # execute its two halves, so every path — single-device, each
+        # shard of ShardedPiperPipeline, every streaming-service bucket —
+        # runs the same validated, grouped, tier-routed program.
+        self.compiled = plan_compiler.compile_plan(
+            self.plan,
+            self.schema,
+            fused=config.fused_enabled,
+            use_kernels=config.use_kernels,
+        )
         self._hex_table = jnp.asarray(self.schema.field_is_hex())
         # jitted chunk steps are cached on the instance: re-jitting per
         # stream pass would retrace/recompile on every epoch
@@ -140,20 +170,12 @@ class PiperPipeline:
     # Loop ① — GenVocab
     # ------------------------------------------------------------------ #
     def init_state(self) -> vocab_lib.VocabState:
-        return vocab_lib.VocabState.init(
-            self.schema.n_sparse, self.schema.vocab_range
-        )
+        return self.compiled.init_state()
 
     def vocab_step(
         self, state: vocab_lib.VocabState, chunk
     ) -> vocab_lib.VocabState:
-        batch = self._as_batch(chunk)
-        modded = ops.positive_modulus(batch.sparse, self.schema.vocab_range)
-        if self.config.use_kernels:
-            from repro.kernels.vocab import ops as vocab_ops
-
-            return vocab_ops.genvocab_update(state, modded, batch.valid)
-        return vocab_lib.update(state, modded, batch.valid)
+        return self.compiled.vocab_step(state, self._as_batch(chunk))
 
     def build_state_stream(self, chunks: Iterable) -> vocab_lib.VocabState:
         """Loop ① over a host iterator, stopping *before* finalization.
@@ -190,24 +212,7 @@ class PiperPipeline:
     def transform_chunk(
         self, vocabulary: vocab_lib.Vocabulary, chunk
     ) -> schema_lib.ProcessedBatch:
-        batch = self._as_batch(chunk)
-        if self.config.fused_enabled:
-            # Piper's dataflow: the whole chain in one on-chip pass —
-            # no modded/ids/dense intermediates round-tripping HBM.
-            sparse_ids, dense = ops.fused_transform(
-                vocabulary, batch.sparse, batch.dense
-            )
-        else:
-            modded = ops.positive_modulus(batch.sparse, self.schema.vocab_range)
-            sparse_ids = ops.apply_vocab(
-                vocabulary, modded, use_kernel=self.config.use_kernels
-            )
-            dense = ops.dense_transform(
-                batch.dense, use_kernel=self.config.use_kernels
-            )
-        return schema_lib.ProcessedBatch(
-            label=batch.label, dense=dense, sparse=sparse_ids, valid=batch.valid
-        )
+        return self.compiled.transform(vocabulary, self._as_batch(chunk))
 
     def frozen_transform(
         self, vocabulary: vocab_lib.Vocabulary
@@ -286,6 +291,11 @@ class FrozenVocabTransform:
     @property
     def config(self) -> PipelineConfig:
         return self._pipe.config
+
+    @property
+    def compiled(self) -> "plan_compiler.CompiledPlan":
+        """The compiled plan this transform executes (loop-② half)."""
+        return self._pipe.compiled
 
     @property
     def vocabulary(self) -> vocab_lib.Vocabulary:

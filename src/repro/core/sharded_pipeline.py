@@ -51,11 +51,17 @@ class ShardedPiperPipeline:
     Args:
       config: the same :class:`~repro.core.pipeline.PipelineConfig` the
         single-device engine takes (schema, chunk geometry, input format,
-        kernel routing — all honored unchanged; the per-shard work is
-        delegated to an inner :class:`~repro.core.pipeline.PiperPipeline`).
-        In particular ``use_fused_kernel`` applies per shard: each
-        shard's loop ② runs the fused single-pass Pallas chain
-        (kernels/fused_xform) inside its ``shard_map`` body, so the
+        kernel routing, **plan** — all honored unchanged; the per-shard
+        work is delegated to an inner
+        :class:`~repro.core.pipeline.PiperPipeline`, so every shard
+        executes the same compiled
+        :class:`~repro.core.plan_compiler.CompiledPlan`: loop ① is the
+        plan's vocab-building half — crossed features accumulate their
+        own vocab rows — and loop ② its frozen-transform half, both
+        inside the ``shard_map`` bodies). In particular the
+        ``use_fused_kernel`` compiler hint applies per shard: each
+        shard's canonical loop-② groups run the fused single-pass Pallas
+        chain (kernels/fused_xform) inside its ``shard_map`` body, so the
         data-parallel deployment keeps the on-chip dataflow too.
       mesh: a mesh whose row axes (``'data'``, optionally ``'pod'``) carry
         the shard dimension. Axes other than the row axes are ignored —
@@ -82,6 +88,10 @@ class ShardedPiperPipeline:
         for a in self.row_axes:
             self.n_shards *= mesh.shape[a]
         self._pipe = pipeline_lib.PiperPipeline(config)
+        # the one program every shard executes (validated/grouped/routed
+        # once; shard_map replicates the closure, not the compilation)
+        self.plan = self._pipe.plan
+        self.compiled = self._pipe.compiled
         # jitted entry points cached on the instance (same contract as
         # PiperPipeline: re-jitting per epoch would retrace)
         self._jit_shard_states = jax.jit(self._shard_states)

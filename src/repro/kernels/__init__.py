@@ -22,3 +22,23 @@ def pallas_available() -> bool:
     except Exception:  # pragma: no cover — bare installs only
         return False
     return True
+
+
+def resolve_fused(backend: str | None = None) -> bool:
+    """The single source of truth for the fused-kernel auto knob.
+
+    True iff the Pallas toolchain imports *and* ``backend`` (default: the
+    process's default jax backend) compiles it through Mosaic — i.e. TPU.
+    Everywhere else Pallas only interprets, which is slower than the
+    XLA-fused unfused chain, so auto resolves off and callers opt in
+    explicitly. Consumers: ``PipelineConfig.fused_enabled``, the plan
+    compiler's ``fused=None`` hint, and the fused-kernel wrapper's
+    per-backend interpret switch (``kernels/fused_xform/ops.py``).
+    """
+    if not pallas_available():
+        return False
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    return backend == "tpu"

@@ -23,7 +23,6 @@ reach the row block are sliced back off before returning.
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import vocab as vocab_lib
@@ -55,8 +54,12 @@ def _interpret() -> bool:
     """Compile through Mosaic on TPU; interpret everywhere else (the
     repo-wide CPU-CI convention). Unlike the older kernel packages this
     wrapper decides per backend, so a TPU deployment gets the compiled
-    kernel without callers having to thread an interpret flag."""
-    return jax.default_backend() != "tpu"
+    kernel without callers having to thread an interpret flag. Delegates
+    to ``kernels.resolve_fused`` — the one copy of the backend test
+    (reaching this wrapper implies Pallas already imported)."""
+    from repro import kernels as kernels_lib
+
+    return not kernels_lib.resolve_fused()
 
 
 def fused_transform(

@@ -14,7 +14,12 @@ preprocessing:
     bucket, no step ever compiles again (pinned by jit cache-miss
     counting in tests/test_stream_service.py);
   * each bucket owns a :class:`~repro.core.pipeline.FrozenVocabTransform`
-    (loop ② with the offline-finalized vocabulary) sized to its capacity;
+    (loop ② with the offline-finalized vocabulary) sized to its capacity.
+    Every bucket executes the *same*
+    :class:`~repro.core.plan_compiler.CompiledPlan` — the one named by
+    ``config.plan`` (default: the Criteo chain) — so the online service
+    serves exactly the program the offline engines ran, crossed features
+    and custom dense recipes included;
   * results are **routed back per request** by row span: concatenated
     request rows decode to contiguous output rows (the decoder assigns
     row *k* to the *k*-th newline), so the route step is a slice.
@@ -176,6 +181,7 @@ class MicroBatchScheduler:
             raise ValueError("need at least one bucket capacity")
         self.config = config
         self.schema = config.schema
+        self.plan = config.resolved_plan()
         self.bytes_per_row = (
             int(bytes_per_row) if bytes_per_row else config.schema.max_row_bytes
         )
@@ -289,6 +295,12 @@ class MicroBatchScheduler:
         ]
 
     # -- vocab + compile bookkeeping ----------------------------------- #
+    @property
+    def compiled(self):
+        """The :class:`~repro.core.plan_compiler.CompiledPlan` the buckets
+        execute — one program, instantiated per bucket shape."""
+        return self.buckets[0].transform.compiled
+
     def swap_vocabulary(self, vocabulary: vocab_lib.Vocabulary) -> None:
         """Swap the frozen vocabulary on every bucket (between steps)."""
         for b in self.buckets:

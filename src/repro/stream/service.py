@@ -51,17 +51,20 @@ class StreamingPreprocessService:
     Args:
       config: the shared :class:`~repro.core.pipeline.PipelineConfig`
         (``input_format`` selects utf8 vs binary requests; per-bucket
-        shape fields are overridden by the scheduler). The
-        ``use_fused_kernel`` knob is inherited unchanged: every bucket's
-        :class:`~repro.core.pipeline.FrozenVocabTransform` runs loop ②
-        as the fused single-pass Pallas chain when it is on, so the
-        online path gets the same no-materialization dataflow as the
-        offline engines.
+        shape fields are overridden by the scheduler). ``config.plan``
+        names the :class:`~repro.core.plan.PreprocPlan` to serve — every
+        bucket executes its compiled frozen-transform half, so the online
+        path runs exactly the program the offline engines ran (crossed
+        features, bucketized dense, non-Criteo schemas included). The
+        ``use_fused_kernel`` compiler hint is inherited unchanged: the
+        plan's canonical groups run as the fused single-pass Pallas chain
+        when it is on, the same no-materialization dataflow as offline.
       vocab_state: the **un-finalized** loop-① accumulator from an
         offline run (``PiperPipeline.build_state_stream`` or
-        ``ShardedPiperPipeline.build_state_scan``). Kept un-finalized so
-        :meth:`refresh_vocab` can merge in deltas; the service finalizes
-        internally.
+        ``ShardedPiperPipeline.build_state_scan``) of the *same plan* —
+        its row count is the plan's vocab-column count (crosses carry
+        their own rows). Kept un-finalized so :meth:`refresh_vocab` can
+        merge in deltas; the service finalizes internally.
       bucket_rows / bytes_per_row: scheduler capacities (see
         :class:`~repro.stream.scheduler.MicroBatchScheduler`).
       queue_depth: ingress bound — the backpressure knob.
@@ -85,6 +88,18 @@ class StreamingPreprocessService:
             bucket_rows=bucket_rows,
             bytes_per_row=bytes_per_row,
         )
+        self.plan = self.scheduler.plan
+        # Fail at construction, not at first dispatch: a state built with a
+        # different plan (wrong vocab-column count or modulus range) would
+        # otherwise surface as a shape error deep inside the first jit.
+        compiled = self.scheduler.compiled
+        want = (compiled.n_vocab_columns, compiled.vocab_range)
+        got = tuple(int(x) for x in vocab_state.first_pos.shape)
+        if got != want:
+            raise ValueError(
+                f"vocab_state shape {got} does not match the plan's vocab "
+                f"layout {want}; build loop ① with the same PipelineConfig.plan"
+            )
         self.metrics = metrics_lib.ServiceMetrics()
         self._ingress: queue.Queue = queue.Queue(maxsize=queue_depth)
         self._carry: scheduler_lib.StreamRequest | None = None
