@@ -42,6 +42,20 @@ def main() -> None:
     sec = time_fn(lambda: pipe.build_vocab_stream(iter(chunks)).table)
     emit("fig10/loop1_genvocab", sec, "")
 
+    # loop ① fused vs unfused: the single-pass Modulus → scatter-min
+    # dispatch (kernels/fused_vocab) against the per-op chain above
+    for fused, tag in ((True, "fused"), (False, "unfused")):
+        p = P.PiperPipeline(
+            P.PipelineConfig(
+                schema=schema,
+                chunk_bytes=CHUNK,
+                max_rows_per_chunk=2048,
+                use_fused_vocab=fused,
+            )
+        )
+        sec = time_fn(lambda p=p: p.build_vocab_stream(iter(chunks)).table)
+        emit(f"fig10/loop1_genvocab_{tag}", sec, f"rows_per_s={ROWS / sec:.0f}")
+
     vocab = pipe.build_vocab_stream(iter(chunks))
     state = pipe.init_state()
     for c in chunks:

@@ -1,0 +1,184 @@
+"""Fused single-pass loop-① (GenVocab) kernel vs. the unfused op chain.
+
+Times the per-chunk loop-① state update both ways on the same
+device-resident batch, for both memory tiers (paper §3.2/§4.4.6):
+
+  * ``vmem`` — the paper's 5K vocab point: the fused Pallas kernel keeps
+    the whole per-column ``first_pos`` stack resident in VMEM and the
+    chain (uint32 Modulus → GenVocab scatter-min) is one dispatch per
+    chunk, the state carried across row tiles on-chip;
+  * ``hbm``  — the paper's 1M vocab point: the state cannot stay
+    on-chip, so the fused wrapper falls back to the XLA modulus +
+    scatter-min oracle (same dispatches as the unfused chain).
+
+Besides wall time, each tier reports **dispatches per chunk** — the
+number of jaxpr primitives the chunk update issues before XLA fusion
+(pjit call bodies counted recursively). The fused VMEM tier folds the
+modulus, position masking, and scatter into ONE ``pallas_call``, so its
+count is strictly lower than the unfused chain's — the
+no-materialization property the paper's dataflow argument rests on,
+made measurable.
+
+Output: the usual ``name,us_per_call,derived`` CSV rows plus one
+machine-readable JSON line per tier:
+
+    vocab_json/{tier} {"rows": ..., "fused_rows_per_s": ...,
+                       "unfused_rows_per_s": ..., "speedup": ...,
+                       "fused_dispatches": ..., "unfused_dispatches": ...}
+
+On CPU the kernel runs ``interpret=True`` (the Pallas interpreter), so
+the absolute numbers measure plumbing, not silicon — the benchmark's
+job in CI is to keep the fused loop-① perf harness from rotting; on a
+TPU the same script reports the materialization win. The CI driver
+(`python -m benchmarks.run --only vocab --json-out BENCH_vocab.json`)
+dumps these rows machine-readably as ``BENCH_vocab.json``.
+
+    PYTHONPATH=src python benchmarks/fused_vocab.py [--rows N]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+if __package__ in (None, ""):  # direct script invocation
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+    sys.path.insert(0, _ROOT)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import ops, schema as schema_lib, vocab as vocab_lib
+from repro.data import synth
+from repro.kernels.fused_vocab import ops as fv_ops
+
+ROWS = 65_536
+# The paper's two evaluation points; 1M lands in the HBM tier on both
+# the per-column cutoff and the fused kernel's state-residency budget.
+TIER_SCHEMAS = {
+    "vmem": schema_lib.CRITEO,
+    "hbm": schema_lib.CRITEO_1M,
+}
+
+
+# call-like wrappers that are pure structure (inlined by XLA), not work:
+# descend into their bodies instead of counting them
+_CALL_PRIMS = ("pjit", "closed_call", "core_call", "custom_jvp_call")
+
+
+def count_dispatches(fn, *args) -> int:
+    """Primitive count of ``fn``'s jaxpr. pjit/call wrappers are
+    descended into (they are structure, not work); everything else —
+    including a ``pallas_call``, which is ONE kernel launch no matter
+    how long the on-chip chain inside it is — counts as one dispatch."""
+
+    def count(jaxpr) -> int:
+        n = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name in _CALL_PRIMS:
+                sub = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+                n += count(getattr(sub, "jaxpr", sub))
+            else:
+                n += 1
+        return n
+
+    return count(jax.make_jaxpr(fn)(*args).jaxpr)
+
+
+def run_tier(tier: str, rows: int) -> None:
+    schema = TIER_SCHEMAS[tier]
+    assert fv_ops.fused_vocab_tier(schema.n_sparse, schema.vocab_range) == tier
+    cfg = synth.SynthConfig(schema=schema, rows=rows, seed=3)
+    table = synth.generate_binary(cfg)
+    sparse = jnp.asarray(table["sparse"])
+    valid = jnp.ones(rows, bool)
+
+    def fresh():
+        return vocab_lib.VocabState.init(schema.n_sparse, schema.vocab_range)
+
+    # Both variants absorb the same chunk into a fresh state each call
+    # (the fused kernel donates the state buffer, so reuse would UAF).
+    fused = jax.jit(
+        lambda sp, v: ops.fused_vocab_update(fresh(), sp, v, use_kernel=True)
+    )
+    # use_kernel=False composes the real unfused chain — the same oracle
+    # the differential tests hold the kernel to.
+    unfused = jax.jit(
+        lambda sp, v: ops.fused_vocab_update(fresh(), sp, v, use_kernel=False)
+    )
+
+    # Differential guard: a benchmark that drifts from the oracle would
+    # report a meaningless speedup.
+    st_f = fused(sparse, valid)
+    st_u = unfused(sparse, valid)
+    np.testing.assert_array_equal(
+        np.asarray(st_f.first_pos), np.asarray(st_u.first_pos)
+    )
+    assert int(st_f.rows_seen) == int(st_u.rows_seen)
+
+    d_fused = count_dispatches(fused, sparse, valid)
+    d_unfused = count_dispatches(unfused, sparse, valid)
+    if tier == "vmem":
+        assert d_fused < d_unfused, (d_fused, d_unfused)
+
+    t_fused = time_fn(fused, sparse, valid)
+    t_unfused = time_fn(unfused, sparse, valid)
+    fused_rps = rows / t_fused
+    unfused_rps = rows / t_unfused
+    speedup = t_unfused / t_fused
+    emit(
+        f"vocab/{tier}",
+        t_fused,
+        f"rows_per_s={fused_rps:.0f};unfused_rows_per_s={unfused_rps:.0f};"
+        f"speedup={speedup:.3f};rows={rows};"
+        f"fused_dispatches={d_fused};unfused_dispatches={d_unfused}",
+    )
+    print(
+        f"vocab_json/{tier} "
+        + json.dumps(
+            {
+                "rows": rows,
+                "vocab_range": schema.vocab_range,
+                "fused_rows_per_s": round(fused_rps),
+                "unfused_rows_per_s": round(unfused_rps),
+                "speedup": round(speedup, 4),
+                "fused_dispatches": d_fused,
+                "unfused_dispatches": d_unfused,
+            }
+        )
+    )
+
+
+def main(rows: int = ROWS) -> None:
+    for tier in ("vmem", "hbm"):
+        run_tier(tier, rows)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rows", type=int, default=ROWS)
+    ap.add_argument(
+        "--json-out",
+        default="",
+        help="dump this run's rows machine-readably (the CI vocab job "
+        "passes BENCH_vocab.json), same shape as benchmarks.run",
+    )
+    args = ap.parse_args()
+    from benchmarks import common as _common
+
+    mark = len(_common.RECORDS)
+    main(rows=args.rows)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(
+                {"sections": {"vocab": _common.RECORDS[mark:]}, "failures": []},
+                f,
+                indent=2,
+            )
+        print(f"# wrote {args.json_out} ({len(_common.RECORDS) - mark} rows)")

@@ -23,6 +23,7 @@ from benchmarks import (
     fig8_cpu_scaling,
     fig9_end2end,
     fig10_breakdown,
+    fused_vocab,
     fused_xform,
     plan_bench,
     stream_service,
@@ -44,6 +45,9 @@ SECTIONS = {
     "stream": stream_service.main,
     # fused single-pass loop-② kernel vs unfused chain, both memory tiers
     "fused": fused_xform.main,
+    # fused single-pass loop-① (GenVocab) kernel vs unfused chain; the
+    # CI vocab job dumps it as BENCH_vocab.json via --json-out
+    "vocab": fused_vocab.main,
     # compiled-plan vs legacy loop-② throughput + a crossed-feature plan
     "plan": plan_bench.main,
 }

@@ -3,8 +3,10 @@
 Each operator is a pure jnp function; ``apply_vocab``/``dense_transform``
 optionally dispatch to the Pallas kernels (kernels/vocab,
 kernels/dense_xform) following the paper's SRAM-vs-HBM placement policy,
-and ``fused_transform`` collapses the whole loop-② chain into one
-dispatch (kernels/fused_xform — Piper's on-chip dataflow).
+``fused_transform`` collapses the whole loop-② chain into one dispatch
+(kernels/fused_xform — Piper's on-chip dataflow), and
+``fused_vocab_update`` does the same for loop ①'s Modulus → GenVocab
+scatter-min (kernels/fused_vocab).
 ``Decode`` and ``FillMissing`` live in kernels/decode_utf8 (FillMissing is
 folded into Decode, as on the FPGA). ``Hex2Int`` needs no explicit op —
 the decoder already produces integers, mirroring the paper's observation
@@ -112,6 +114,38 @@ def fused_transform(
         return fx_ops.fused_transform(vocab, sparse, dense)
     modded = positive_modulus(sparse, vocab.vocab_range)
     return apply_vocab(vocab, modded), dense_transform(dense)
+
+
+def fused_vocab_update(
+    state: vocab_lib.VocabState,
+    sparse: jnp.ndarray,
+    valid: jnp.ndarray,
+    use_kernel: bool = True,
+) -> vocab_lib.VocabState:
+    """Whole loop-① chain — Modulus → GenVocab scatter-min — as ONE
+    dispatch (paper §3.2/§4.4: the row streams through the operator
+    graph on-chip; the modded matrix never round-trips HBM between the
+    modulus and the state update).
+
+    With ``use_kernel`` the chain runs through the fused Pallas kernel
+    (kernels/fused_vocab), tier-routed: state stacks within the VMEM
+    budget stay resident on-chip across row tiles; larger stacks fall
+    back to the XLA modulus + scatter-min oracle. Without it, the
+    unfused ops compose — **bit-identical** state either way (scatter-min
+    is order-independent), used as the differential oracle.
+
+    sparse int32 [rows, n_cols] (raw hash bitcasts); valid bool [rows]
+    → the updated :class:`~repro.core.vocab.VocabState`. With
+    ``use_kernel`` the input ``state`` is **consumed** (its buffer is
+    donated for in-place accumulation on backends that honor donation);
+    thread the returned state through instead of reusing the old one.
+    """
+    if use_kernel:
+        from repro.kernels.fused_vocab import ops as fv_ops
+
+        return fv_ops.fused_update(state, sparse, valid)
+    modded = positive_modulus(sparse, int(state.first_pos.shape[1]))
+    return vocab_lib.update(state, modded, valid)
 
 
 def apply_vocab(

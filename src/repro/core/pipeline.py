@@ -30,9 +30,13 @@ Loop ②'s canonical groups can run as ONE fused Pallas dispatch
 (``PipelineConfig.use_fused_kernel`` — a compiler hint, resolved by
 ``kernels.resolve_fused``; kernels/fused_xform): the row tile streams
 through Modulus → ApplyVocab ∥ Neg2Zero → Logarithm entirely on-chip,
-the paper's no-intermediate-materialization dataflow. Default (None)
-auto-enables it wherever Pallas compiles (TPU backend); the unfused
-per-op chain remains the differential oracle (knob False).
+the paper's no-intermediate-materialization dataflow. Loop ① gets the
+matching treatment (``PipelineConfig.use_fused_vocab``;
+kernels/fused_vocab): the row tile's uint32 Modulus and the GenVocab
+scatter-min into the VMEM-resident ``VocabState`` fuse into one
+dispatch, completing the "both loops single-pass" story. Defaults
+(None) auto-enable both wherever Pallas compiles (TPU backend); the
+unfused per-op chains remain the differential oracles (knob False).
 """
 
 from __future__ import annotations
@@ -72,6 +76,18 @@ class PipelineConfig:
     # False. Outputs are bit-identical on sparse ids and allclose (same
     # f32 formula) on dense vs. the unfused chain either way.
     use_fused_kernel: bool | None = None
+    # COMPILER HINT — loop ①'s canonical vocab group (uint32 Modulus →
+    # GenVocab scatter-min over every vocab column, crosses included) as
+    # one fused Pallas dispatch with the VocabState resident in VMEM
+    # across row tiles (kernels/fused_vocab), instead of separate
+    # modulus and scatter dispatches with an HBM round-trip between
+    # them. Same auto semantics as `use_fused_kernel`: None resolves
+    # via `kernels.resolve_fused()` (on iff Pallas *compiles*, i.e. TPU
+    # backend; CPU interpret mode is slower than the XLA-fused unfused
+    # chain, so auto stays off there and tests/CI opt in explicitly).
+    # State is bit-identical to the unfused chain either way —
+    # scatter-min is order-independent.
+    use_fused_vocab: bool | None = None
     # The declarative per-column preprocessing program (core/plan.py).
     # None = `plan.criteo_default(schema)` — the paper's exact chain, so
     # every pre-IR call site keeps its behavior bit-for-bit. Compiled once
@@ -92,6 +108,17 @@ class PipelineConfig:
 
             return kernels_lib.resolve_fused()
         return self.use_fused_kernel
+
+    @property
+    def fused_vocab_enabled(self) -> bool:
+        """The resolved ``use_fused_vocab`` hint (None → on iff the
+        Pallas toolchain imports and it compiles on this backend —
+        ``kernels.resolve_fused``)."""
+        if self.use_fused_vocab is None:
+            from repro import kernels as kernels_lib
+
+            return kernels_lib.resolve_fused()
+        return self.use_fused_vocab
 
     def resolved_plan(self) -> plan_lib.PreprocPlan:
         """The plan this config executes (None → the Criteo default)."""
@@ -114,6 +141,7 @@ class PiperPipeline:
             self.schema,
             fused=config.fused_enabled,
             use_kernels=config.use_kernels,
+            fused_vocab=config.fused_vocab_enabled,
         )
         self._hex_table = jnp.asarray(self.schema.field_is_hex())
         # jitted chunk steps are cached on the instance: re-jitting per

@@ -30,7 +30,13 @@ Compilation passes
    ONE dispatch through ``ops.fused_transform``, i.e. the fused Pallas
    kernel with its VMEM/HBM residency policy (``kernels/fused_xform``).
    Remaining groups compose their ops as XLA-fused jnp stages. The
-   ``fused``/``use_kernels`` compiler hints come from ``PipelineConfig``.
+   **vocab half** gets the same treatment: every ``GenVocab`` column
+   (HashCross rows included) forms one canonical group whose chain
+   (uint32 Modulus → scatter-min state update) tier-routes into ONE
+   ``ops.fused_vocab_update`` dispatch (kernels/fused_vocab VMEM/HBM
+   policy) when the ``fused_vocab`` hint is on. The ``fused`` /
+   ``fused_vocab`` / ``use_kernels`` compiler hints come from
+   ``PipelineConfig``.
 
 For ``plan.criteo_default()`` every gather/subset/assembly step below is
 the identity, so the emitted program is the pre-IR hard-coded chain,
@@ -235,11 +241,13 @@ class CompiledPlan:
         *,
         fused: bool,
         use_kernels: bool,
+        fused_vocab: bool = False,
     ):
         validate_plan(plan, schema)
         self.plan = plan
         self.schema = schema
         self.fused = fused
+        self.fused_vocab = fused_vocab
         self.use_kernels = use_kernels
         self.n_dense_out = plan.n_dense_out
         self.n_sparse_out = plan.n_sparse_out
@@ -287,6 +295,11 @@ class CompiledPlan:
         self._fused_dispatch = (
             fused and self._n_apply_columns > 0 and has_canonical_dense
         )
+        # Loop ①'s single canonical group is "every GenVocab column"
+        # (crosses materialize at gather time and join the same rows), so
+        # the whole vocab half tier-routes as ONE fused dispatch whenever
+        # the hint is on and there is state to build.
+        self._fused_vocab_dispatch = fused_vocab and self.n_vocab_columns > 0
         apply_slots: list[int] = []
         apply_sources: list[object] = []
         apply_rows: list[int] = []
@@ -337,6 +350,26 @@ class CompiledPlan:
 
         return fx_ops.fused_tier(max(self._n_apply_columns, 1), self.vocab_range)
 
+    @property
+    def vocab_tier(self) -> str:
+        """Memory tier of the loop-① state dispatch — computed from the
+        rows the ``VocabState`` accumulator actually carries (crosses
+        included), so it matches what ``fused_vocab_tier()`` picks at
+        runtime."""
+        from repro.kernels.fused_vocab import ops as fv_ops
+
+        return fv_ops.fused_vocab_tier(
+            max(self.n_vocab_columns, 1), self.vocab_range
+        )
+
+    @property
+    def vocab_route(self) -> str:
+        """Where the compiler sent the vocab-building half:
+        ``"fused/vmem"``, ``"fused/hbm"``, or ``"unfused"``."""
+        if self._fused_vocab_dispatch:
+            return f"fused/{self.vocab_tier}"
+        return "unfused"
+
     def describe(self) -> str:
         head = (
             f"CompiledPlan: {self.n_dense_out} dense + {self.n_sparse_out} "
@@ -344,7 +377,11 @@ class CompiledPlan:
             f"{self.vocab_range}, fused={self.fused} "
             f"(dispatch={'fused/' + self.tier if self._fused_dispatch else 'unfused'})"
         )
-        return "\n".join([head] + [g.describe() for g in self.groups])
+        vocab_half = (
+            f"[vocab ×{self.n_vocab_columns} → {self.vocab_route}] "
+            "Modulus → GenVocab (loop ① scatter-min)"
+        )
+        return "\n".join([head, vocab_half] + [g.describe() for g in self.groups])
 
     # -- gather / subset / assembly helpers ---------------------------- #
     def _gather_sparse(self, sparse: jnp.ndarray, sources: tuple) -> jnp.ndarray:
@@ -444,11 +481,18 @@ class CompiledPlan:
         self, state: vocab_lib.VocabState, batch: schema_lib.TabularBatch
     ) -> vocab_lib.VocabState:
         """Absorb one decoded chunk into the first-occurrence state —
-        every GenVocab column (crosses materialized first), one scatter."""
-        modded = ops.positive_modulus(
-            self._gather_sparse(batch.sparse, self._vocab_sources),
-            self.vocab_range,
-        )
+        every GenVocab column (crosses materialized first), one scatter.
+
+        With the ``fused_vocab`` hint the whole chain (uint32 Modulus →
+        scatter-min) runs as ONE tier-routed dispatch through
+        ``ops.fused_vocab_update`` (kernels/fused_vocab): the modded
+        matrix never materializes to HBM between the modulus and the
+        state update — loop ①'s half of Piper's on-chip dataflow, bit-
+        identical to the unfused chain below on every path."""
+        raw = self._gather_sparse(batch.sparse, self._vocab_sources)
+        if self._fused_vocab_dispatch:
+            return ops.fused_vocab_update(state, raw, batch.valid)
+        modded = ops.positive_modulus(raw, self.vocab_range)
         if self.use_kernels:
             from repro.kernels.vocab import ops as vocab_ops
 
@@ -500,15 +544,27 @@ def compile_plan(
     *,
     fused: bool | None = None,
     use_kernels: bool = False,
+    fused_vocab: bool | None = None,
 ) -> CompiledPlan:
     """Validate + group + route ``plan`` into a :class:`CompiledPlan`.
 
     ``fused`` is the resolved ``PipelineConfig.use_fused_kernel`` hint
-    (``None`` re-resolves via ``kernels.resolve_fused()``); ``use_kernels``
-    routes the unfused per-op stages through their Pallas kernels.
+    (``None`` re-resolves via ``kernels.resolve_fused()``) for the
+    loop-② transform half; ``fused_vocab`` is the matching
+    ``PipelineConfig.use_fused_vocab`` hint for the loop-① vocab half
+    (same ``None`` resolution); ``use_kernels`` routes the unfused
+    per-op stages through their Pallas kernels.
     """
-    if fused is None:
+    if fused is None or fused_vocab is None:
         from repro import kernels as kernels_lib
 
-        fused = kernels_lib.resolve_fused()
-    return CompiledPlan(plan, schema, fused=bool(fused), use_kernels=use_kernels)
+        resolved = kernels_lib.resolve_fused()
+        fused = resolved if fused is None else fused
+        fused_vocab = resolved if fused_vocab is None else fused_vocab
+    return CompiledPlan(
+        plan,
+        schema,
+        fused=bool(fused),
+        use_kernels=use_kernels,
+        fused_vocab=bool(fused_vocab),
+    )

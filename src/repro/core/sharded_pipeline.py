@@ -62,7 +62,13 @@ class ShardedPiperPipeline:
         ``use_fused_kernel`` compiler hint applies per shard: each
         shard's canonical loop-② groups run the fused single-pass Pallas
         chain (kernels/fused_xform) inside its ``shard_map`` body, so the
-        data-parallel deployment keeps the on-chip dataflow too.
+        data-parallel deployment keeps the on-chip dataflow too. The
+        same holds for loop ①'s ``use_fused_vocab`` hint: each shard
+        accumulates its private ``VocabState`` through the fused
+        Modulus → scatter-min dispatch (kernels/fused_vocab) inside
+        ``shard_map``, and the monoid ``vocab.merge_tree`` reduction is
+        unchanged — fused and unfused shards produce bit-identical
+        states, so they merge interchangeably.
       mesh: a mesh whose row axes (``'data'``, optionally ``'pod'``) carry
         the shard dimension. Axes other than the row axes are ignored —
         chunks and state are not partitioned over them.

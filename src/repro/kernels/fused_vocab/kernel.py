@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: the whole loop-① operator chain in one VMEM pass.
+
+PR 3 gave loop ② the paper's no-materialization dataflow (a row tile
+streams through Modulus → ApplyVocab ∥ Neg2Zero → Logarithm on-chip);
+loop ① still ran decode → ``positive_modulus`` → scatter-min
+``vocab.update`` as separate dispatches, round-tripping the modded
+matrix through HBM between them — exactly the producer-side per-op
+materialization the paper identifies as the CPU's GenVocab bottleneck
+(row-wise synchronization on the shared dictionary). This kernel
+collapses the chain:
+
+``fused_genvocab_kernel`` (VMEM tier)
+    One grid step per row tile. The raw sparse tile (int32 hash
+    bitcasts, straight out of Decode) is bitcast to uint32 and reduced
+    modulo ``vocab_range`` *inside* the kernel, then scatter-min'd into
+    the :class:`~repro.core.vocab.VocabState` ``first_pos`` accumulator
+    — which uses a **constant index map** plus an input/output alias,
+    so Pallas DMAs the whole state into VMEM once at the first grid
+    step and keeps it resident (and carried) across every row tile of
+    the call: the FPGA's on-chip-BRAM dictionary build, with the modded
+    values never leaving the chip. The scatter itself is the literal
+    II=2 read-modify-write loop of the FPGA, kept serial *within* the
+    tile because two equal hashes in one tile must min-combine; the
+    result is nevertheless order-independent (min is commutative), so
+    it is bit-identical to the vectorized XLA scatter-min oracle.
+
+HBM tier (state stack over the residency budget) — there is no kernel:
+the modulus and scatter-min fall back to the XLA oracle (ops.py), the
+same many-outstanding-writes pattern ``vocab.update`` already uses for
+HBM-resident state. Identical results — property-tested.
+
+Like every kernel package here, the kernels run ``interpret=True`` on
+CPU (tier-1 CI exercises the logic without accelerator hardware) and
+compiled Mosaic on a TPU backend (ops.py switches per backend). The CI
+container is CPU-only, so the compiled lowering — in particular the
+first-visit contents of the aliased accumulator block and the dynamic
+per-element RMW indexing — is **not** exercised by CI; on first TPU
+bring-up run ``tests/test_fused_vocab.py`` there before trusting the
+auto-enabled default, and set ``PipelineConfig.use_fused_vocab=False``
+to opt out. The ``@pl.when(step == 0)`` copy below re-initializes the
+accumulator from the aliased input explicitly, so correctness does not
+depend on the backend materializing aliased output blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _modulus(sparse_tile: jnp.ndarray, vocab_range: int) -> jnp.ndarray:
+    """uint32 modulus on an int32-bitcast tile (sparse hashes are always
+    positive — paper §3.2 — so the modulus is defined on the uint32 view)."""
+    u = jax.lax.bitcast_convert_type(sparse_tile, jnp.uint32)
+    return (u % jnp.uint32(vocab_range)).astype(jnp.int32)
+
+
+def _fused_genvocab_kernel(
+    sparse_ref, pos_ref, state_in_ref, state_ref, *, vocab_range
+):
+    # sparse_ref:   int32 [R_BLK, n_cols] — raw hash bitcasts (pre-modulus)
+    # pos_ref:      int32 [1, R_BLK] — global row positions (NEVER = padding)
+    # state_in_ref: int32 [n_cols, vocab_range] — prior first_pos (aliased)
+    # state_ref:    int32 [n_cols, vocab_range] — accumulator, constant index
+    #               map: resident in VMEM and carried across all grid steps
+    @pl.when(pl.program_id(0) == 0)
+    def _init():  # first tile: seed the accumulator from the carried state
+        state_ref[...] = state_in_ref[...]
+
+    modded = _modulus(sparse_ref[...], vocab_range)
+    n_rows, n_cols = sparse_ref.shape
+
+    def row_body(i, _):
+        p = pos_ref[0, i]
+
+        def col_body(c, _):
+            v = modded[i, c]
+            cur = state_ref[c, v]
+            state_ref[c, v] = jnp.minimum(cur, p)  # the FPGA's II=2 RMW
+            return 0
+
+        return jax.lax.fori_loop(0, n_cols, col_body, 0)
+
+    jax.lax.fori_loop(0, n_rows, row_body, 0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("row_block", "interpret"), donate_argnums=(0,)
+)
+def fused_genvocab(
+    state: jnp.ndarray,
+    sparse: jnp.ndarray,
+    pos_tiles: jnp.ndarray,
+    *,
+    row_block: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Whole loop-① chain per row tile, state resident in VMEM.
+
+    state     int32 [n_cols, vocab_range] — first_pos accumulator
+    sparse    int32 [rows, n_cols] (raw hash bitcasts, pre-modulus)
+    pos_tiles int32 [rows // row_block, row_block] global positions
+              (``vocab.NEVER`` for padding/invalid rows)
+    → updated first_pos int32 [n_cols, vocab_range]
+
+    ``rows`` must divide by ``row_block`` (ops.py pads; padding rows
+    carry NEVER positions, which min() ignores).
+    """
+    n_cols, vocab_range = state.shape
+    rows = sparse.shape[0]
+    if rows % row_block:
+        raise ValueError(f"rows ({rows}) must divide by row_block ({row_block})")
+    if pos_tiles.shape != (rows // row_block, row_block):
+        raise ValueError(
+            f"pos_tiles shape {pos_tiles.shape} != {(rows // row_block, row_block)}"
+        )
+    return pl.pallas_call(
+        functools.partial(_fused_genvocab_kernel, vocab_range=vocab_range),
+        grid=(rows // row_block,),
+        in_specs=[
+            pl.BlockSpec((row_block, n_cols), lambda r: (r, 0)),
+            pl.BlockSpec((1, row_block), lambda r: (r, 0)),
+            pl.BlockSpec((n_cols, vocab_range), lambda r: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n_cols, vocab_range), lambda r: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_cols, vocab_range), jnp.int32),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(sparse, pos_tiles, state)

@@ -1,0 +1,118 @@
+"""jit'd wrapper + memory-tier dispatch for the fused loop-① kernel.
+
+Tier policy (paper §3.2, §4.4.6 — the same two-condition guard as the
+fused loop-② kernel, ``kernels/fused_xform/ops.py``):
+
+  * **VMEM tier** — ``vocab_range ≤ vocab.VMEM_TIER_MAX`` *and* the whole
+    ``first_pos`` state stack fits the fused residency budget
+    (:data:`FUSED_STATE_VMEM_BYTES`): one Pallas kernel bitcasts,
+    reduces modulo ``vocab_range``, and scatter-mins first-occurrence
+    positions per row tile, with the *entire* per-column state resident
+    in VMEM for the whole call and carried across grid steps. The extra
+    bytes condition is what distinguishes this dispatch from the
+    per-column vocab kernel (kernels/vocab): that one holds *one*
+    ≤2 MiB state row at a time, this one holds all ``n_cols`` of them
+    simultaneously.
+
+  * **HBM tier** — otherwise: the state cannot stay on-chip, so the
+    chunk falls back to the unfused chain itself
+    (``core.ops.positive_modulus`` → ``vocab.update``'s vectorized XLA
+    scatter-min against the HBM-resident state) — one shared
+    implementation, not a copy; ``ref.py`` remains the standalone
+    differential-test oracle.
+
+Both tiers are **bit-identical** to the unfused ``positive_modulus`` →
+``vocab.update`` chain: scatter-min is order-independent, padding rows
+carry ``NEVER`` positions (the min identity), and the valid-row count
+advances exactly as ``vocab.update`` advances it.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import vocab as vocab_lib
+from repro.kernels.fused_vocab import kernel
+
+# VMEM budget for the resident first_pos stack (all columns at once) —
+# the same 8 MiB residency budget as the fused loop-② table stack
+# (kernels/fused_xform/ops.py): half of a 16 MiB/core VMEM, leaving room
+# for the row tiles + double buffering. Criteo at the paper's 5K point:
+# 26 × 5000 × 4 B ≈ 0.5 MiB — comfortably in; 26 columns at
+# VMEM_TIER_MAX would be 52 MiB — routed to HBM tier.
+FUSED_STATE_VMEM_BYTES = 8 * 1024 * 1024
+
+
+def fused_vocab_tier(n_cols: int, vocab_range: int) -> str:
+    """Which tier the fused loop-① dispatch picks: ``"vmem"`` or ``"hbm"``."""
+    state_bytes = n_cols * vocab_range * 4
+    if (
+        vocab_range <= vocab_lib.VMEM_TIER_MAX
+        and state_bytes <= FUSED_STATE_VMEM_BYTES
+    ):
+        return "vmem"
+    return "hbm"
+
+
+def _row_block(rows: int) -> int:
+    return min(256, max(8, rows))
+
+
+def _interpret() -> bool:
+    """Compile through Mosaic on TPU; interpret everywhere else (the
+    repo-wide CPU-CI convention). Decided per backend via
+    ``kernels.resolve_fused`` — the one copy of the backend test
+    (reaching this wrapper implies Pallas already imported)."""
+    from repro import kernels as kernels_lib
+
+    return not kernels_lib.resolve_fused()
+
+
+def fused_update(
+    state: vocab_lib.VocabState, sparse: jnp.ndarray, valid: jnp.ndarray
+) -> vocab_lib.VocabState:
+    """Loop ①'s per-chunk chain in one dispatch, tier-routed.
+
+    sparse int32 [rows, n_cols] (raw hash bitcasts, pre-modulus);
+    valid bool [rows] → the updated :class:`~repro.core.vocab.VocabState`
+    (bit-identical to ``vocab.update(state, positive_modulus(sparse, V),
+    valid)``).
+
+    **Consumes** ``state``: the VMEM tier donates ``state.first_pos`` to
+    the kernel (in-place accumulation, the same convention as
+    ``kernels/vocab``'s ``genvocab``), so on backends that honor
+    donation (TPU) the caller must not read the old state afterwards —
+    thread the returned state through, as every engine's loop ① does.
+    """
+    rows, n_cols = sparse.shape
+    vocab_range = int(state.first_pos.shape[1])
+    if (
+        rows == 0
+        or n_cols == 0
+        or fused_vocab_tier(n_cols, vocab_range) == "hbm"
+    ):
+        # HBM tier + degenerate tiles (no Pallas grid): the XLA oracle
+        # IS the unfused chain — route through the one shared
+        # implementation instead of a copy of its scatter-min.
+        from repro.core import ops as core_ops
+
+        return vocab_lib.update(
+            state, core_ops.positive_modulus(sparse, vocab_range), valid
+        )
+    pos = state.rows_seen + jnp.arange(rows, dtype=jnp.int32)
+    # Invalid (padding) rows scatter NEVER, which min() ignores.
+    pos = jnp.where(valid, pos, vocab_lib.NEVER)
+    rows_seen = state.rows_seen + jnp.sum(valid.astype(jnp.int32))
+    blk = _row_block(rows)
+    pad = (-rows) % blk
+    # Padding rows scatter NEVER at value 0 % V — a min() no-op.
+    sparse_p = jnp.pad(sparse, ((0, pad), (0, 0)))
+    pos_p = jnp.pad(pos, (0, pad), constant_values=vocab_lib.NEVER)
+    first_pos = kernel.fused_genvocab(
+        state.first_pos,
+        sparse_p,
+        pos_p.reshape(-1, blk),
+        row_block=blk,
+        interpret=_interpret(),
+    )
+    return vocab_lib.VocabState(first_pos=first_pos, rows_seen=rows_seen)

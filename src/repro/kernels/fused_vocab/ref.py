@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the fused loop-① (GenVocab) state update.
+
+Exactly the unfused op chain the fused kernel replaces:
+``positive_modulus`` → ``vocab.update``'s vectorized scatter-min, taking
+the *raw* decoded sparse columns (int32 hash bitcasts). The differential
+tests (tests/test_fused_vocab.py) hold the kernel to this oracle
+bit-for-bit — scatter-min is order-independent, so serial-RMW kernel and
+vectorized XLA scatter must agree exactly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def fused_genvocab(
+    first_pos: jnp.ndarray, sparse: jnp.ndarray, pos: jnp.ndarray
+) -> jnp.ndarray:
+    """first_pos int32 [n_cols, vocab_range]; sparse int32 [rows, n_cols]
+    (raw hashes, pre-modulus); pos int32 [rows] (NEVER for invalid rows)
+    → updated first_pos."""
+    vocab_range = first_pos.shape[1]
+    u = jax.lax.bitcast_convert_type(sparse, jnp.uint32)
+    modded = (u % jnp.uint32(vocab_range)).astype(jnp.int32)
+    cols = jnp.arange(sparse.shape[1], dtype=jnp.int32)[None, :]
+    return first_pos.at[
+        jnp.broadcast_to(cols, modded.shape), modded
+    ].min(jnp.broadcast_to(pos[:, None], modded.shape))

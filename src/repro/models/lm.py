@@ -317,37 +317,89 @@ class LM:
         return params
 
     # ------------------------- forward ------------------------------ #
+    def _superblock_body(self, carry, sb_params, context, compute_dtype):
+        """One superblock step with an fp32 residual carry.
+
+        The across-superblock reduction accumulates in f32 and only
+        rounds to the compute dtype at each superblock's entry, so
+        depth-compounded bf16 rounding (which the scan and unrolled
+        lowerings would otherwise round differently) never enters the
+        carry. Block-internal compute stays in the compute dtype."""
+        cfg = self.cfg
+        x32, aux = carry
+        xb = x32.astype(compute_dtype)
+        xo = xb
+        for spec, p in zip(cfg.superblock, sb_params):
+            xo, a = _block_forward(
+                xo, p, spec, cfg, context=context, impl=self.attn_impl,
+                block_k=self.attn_block_k,
+            )
+            xo = constrain(xo, "act")
+            aux = aux + a
+        if compute_dtype == jnp.float32:
+            # already-f32 compute: the carry IS the stream — the
+            # delta-accumulate below would only add two extra roundings
+            return xo, aux
+        # both operands are compute-dtype values, exactly representable
+        # in f32, so the delta carries the block's full contribution
+        x32 = x32 + (xo.astype(jnp.float32) - xb.astype(jnp.float32))
+        return x32, aux
+
+    def _run_unrolled(self, carry, blocks, context, compute_dtype):
+        """Python-loop layers: every superblock appears in the HLO — used
+        by the dry-run's cost lowerings (while bodies are counted once by
+        XLA's cost analysis, so scan would undercount depth)."""
+
+        def body(c, sb):
+            return self._superblock_body(c, sb, context, compute_dtype), None
+
+        if self.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        for i in range(self.cfg.n_superblocks):
+            sb = jax.tree.map(lambda a: a[i], blocks)
+            carry, _ = body(carry, sb)
+            # pin the unrolled lowering to the scan's per-iteration
+            # materialization: without the barrier XLA fuses across
+            # superblock boundaries and rounds the bf16 compute
+            # differently than the while-loop body, drifting the two
+            # lowerings apart (test_unroll_consistency)
+            carry = jax.lax.optimization_barrier(carry)
+        return carry
+
     def _scan_blocks(
         self, x: jnp.ndarray, blocks: tuple, context: jnp.ndarray | None
     ) -> tuple[jnp.ndarray, jnp.ndarray]:
         cfg = self.cfg
+        compute_dtype = x.dtype
 
-        def superblock_body(carry, sb_params):
-            x, aux = carry
-            for spec, p in zip(cfg.superblock, sb_params):
-                x, a = _block_forward(
-                    x, p, spec, cfg, context=context, impl=self.attn_impl,
-                    block_k=self.attn_block_k,
-                )
-                x = constrain(x, "act")
-                aux = aux + a
-            return (x, aux), None
+        def body(c, sb):
+            return self._superblock_body(c, sb, context, compute_dtype), None
 
-        body = superblock_body
         if self.remat:
-            body = jax.checkpoint(superblock_body, prevent_cse=False)
-        carry = (x, jnp.zeros((), jnp.float32))
+            body = jax.checkpoint(body, prevent_cse=False)
+        carry = (x.astype(jnp.float32), jnp.zeros((), jnp.float32))
         if self.unroll:
-            # python loop: every superblock appears in the HLO — used by the
-            # dry-run's cost lowerings (while bodies are counted once by
-            # XLA's cost analysis, so scan would undercount depth)
-            for i in range(cfg.n_superblocks):
-                sb = jax.tree.map(lambda a: a[i], blocks)
-                carry, _ = body(carry, sb)
+            if isinstance(x, jax.core.Tracer):
+                # already under a trace (dry-run lowering, outer jit):
+                # inline the loop — the surrounding compilation sees the
+                # same unrolled graph as before
+                carry = self._run_unrolled(carry, blocks, context, compute_dtype)
+            else:
+                # eager: run compiled. Op-by-op eager dispatch rounds
+                # bf16 differently than any fused XLA graph, so the
+                # unrolled loop must go through XLA — like lax.scan
+                # always does — for the two lowerings to agree.
+                if "_unroll_exec" not in self.__dict__:
+                    self.__dict__["_unroll_exec"] = jax.jit(
+                        self._run_unrolled, static_argnums=(3,)
+                    )
+                carry = self.__dict__["_unroll_exec"](
+                    carry, blocks, context, compute_dtype
+                )
         else:
             carry, _ = jax.lax.scan(body, carry, blocks)
-        x, aux = carry
-        return x, aux
+        x32, aux = carry
+        return x32.astype(compute_dtype), aux
 
     def hidden(
         self,

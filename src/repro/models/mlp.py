@@ -150,7 +150,9 @@ def _moe_forward_ep(x, params, cfg, kind, mesh):
         else:
             wg, wu, wd = (w.astype(x.dtype) for w in (wg, wu, wd))
 
-        logits = (xt @ router_w.astype(xt.dtype)).astype(jnp.float32)
+        # fp32 router — same rationale as the dense path: bf16 logits
+        # make expert selection sensitive to 1-ulp input noise
+        logits = xt.astype(jnp.float32) @ router_w.astype(jnp.float32)
         probs = jax.nn.softmax(logits, axis=-1)
         gate_vals, expert_idx = jax.lax.top_k(probs, m.top_k)
         gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
@@ -238,7 +240,11 @@ def _moe_forward_dense(x: jnp.ndarray, params: Params, cfg: ModelConfig, kind: s
     xt = x.reshape(tokens, d)
     cap = _capacity(tokens, cfg)
 
-    logits = common.dense(xt, params["router"]).astype(jnp.float32)  # [T,E]
+    # fp32 router: bf16 logits quantize near-ties, so the top_k winner
+    # would depend on 1-ulp input noise (and on how XLA fused the
+    # surrounding graph — scan vs unrolled layer loops compiled the same
+    # block differently and flipped experts). f32 in, f32 matmul.
+    logits = common.dense(xt.astype(jnp.float32), params["router"])  # [T,E]
     probs = jax.nn.softmax(logits, axis=-1)
     gate_vals, expert_idx = jax.lax.top_k(probs, m.top_k)             # [T,K]
     gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)

@@ -16,6 +16,7 @@ latency-bound, fixed-shape, backpressured.
 from repro.stream.metrics import ServiceMetrics
 from repro.stream.scheduler import (
     DEFAULT_BUCKET_ROWS,
+    CompositeRequest,
     MicroBatchScheduler,
     StreamRequest,
     make_request,
@@ -24,6 +25,7 @@ from repro.stream.service import StreamingPreprocessService
 
 __all__ = [
     "DEFAULT_BUCKET_ROWS",
+    "CompositeRequest",
     "MicroBatchScheduler",
     "ServiceMetrics",
     "StreamRequest",

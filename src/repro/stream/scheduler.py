@@ -97,6 +97,61 @@ class StreamRequest:
         self._done.set()
 
 
+class CompositeRequest:
+    """Caller handle for an oversized request served as several sub-chunks.
+
+    The scheduler's buckets cap one micro-batch at ``max_rows`` /
+    ``max_bytes``; a larger request is **split** at submission into
+    bucket-sized sub-requests (:meth:`MicroBatchScheduler.split`) whose
+    row spans reassemble, in order, to the original request — so bulk
+    callers get the same ``result()`` surface instead of a rejection.
+    Sub-requests flow through the ordinary FIFO path (they are coalesced
+    and padded like any other request), and each records its own
+    latency/throughput metrics.
+    """
+
+    def __init__(self, parts: list[StreamRequest]):
+        if not parts:
+            raise ValueError("composite request needs at least one part")
+        self.parts = parts
+        self.n_rows = sum(p.n_rows for p in parts)
+        self.n_bytes = sum(p.n_bytes for p in parts)
+
+    def result(self, timeout: float | None = None) -> dict:
+        """Blocking fetch: the per-part results concatenated back into
+        one ``{label, dense, sparse}`` table of exactly ``n_rows`` rows
+        (sub-chunk order == original row order). ``timeout`` bounds the
+        *total* wait across parts."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        outs = []
+        for p in self.parts:
+            left = None if deadline is None else max(0.0, deadline - time.monotonic())
+            outs.append(p.result(left))
+        return {
+            k: np.concatenate([o[k] for o in outs])
+            for k in ("label", "dense", "sparse")
+        }
+
+    @property
+    def done(self) -> bool:
+        return all(p.done for p in self.parts)
+
+    @property
+    def submit_t(self) -> float | None:
+        return self.parts[0].submit_t
+
+    @property
+    def done_t(self) -> float | None:
+        ts = [p.done_t for p in self.parts]
+        return None if any(t is None for t in ts) else max(ts)
+
+    @property
+    def latency_s(self) -> float | None:
+        if self.submit_t is None or self.done_t is None:
+            return None
+        return self.done_t - self.submit_t
+
+
 def make_request(payload, config: pipeline_lib.PipelineConfig) -> StreamRequest:
     """Validate + wrap a raw payload for ``config.input_format``."""
     schema = config.schema
@@ -162,8 +217,10 @@ class MicroBatchScheduler:
         (``max_rows_per_chunk``/``chunk_bytes`` are overridden per bucket).
       vocabulary: the frozen offline-built vocabulary.
       bucket_rows: ascending row capacities. A request larger than the
-        biggest bucket is rejected at admission (callers shard such bulk
-        jobs through the offline engines instead).
+        biggest bucket is not rejected: the service **splits** it at
+        submission into bucket-sized sub-chunks (:meth:`split`) whose
+        results reassemble per row span behind one
+        :class:`CompositeRequest` handle.
       bytes_per_row: utf8 byte budget per bucket row. The default —
         ``schema.max_row_bytes`` — guarantees any row-fitting batch also
         byte-fits; smaller values trade buffer memory for the chance that
@@ -216,6 +273,55 @@ class MicroBatchScheduler:
         if req.n_rows > self.max_rows:
             return False
         return self.config.input_format != "utf8" or req.n_bytes <= self.max_bytes
+
+    def split(self, req: StreamRequest) -> list[StreamRequest]:
+        """Split an oversized request into admitted, bucket-sized parts.
+
+        Sub-chunks cut at whole-row boundaries, each within the largest
+        bucket on both the row and (utf8) byte axes; concatenating the
+        parts' rows in order reproduces the original request exactly. An
+        already-admitted request passes through as ``[req]``. Raises
+        :class:`ValueError` only when a *single row* exceeds the largest
+        bucket's byte capacity (no split can help there).
+        """
+        if self.admits(req):
+            return [req]
+        parts: list[StreamRequest] = []
+        if self.config.input_format == "utf8":
+            buf = np.asarray(req.payload)
+            # exclusive end byte of every encoded row (incl. its newline)
+            ends = np.flatnonzero(buf == schema_lib.NEWLINE) + 1
+            row0, byte0 = 0, 0
+            while row0 < ends.size:
+                hi = min(row0 + self.max_rows, ends.size)
+                # the byte axis may bind first: longest whole-row prefix
+                hi = min(
+                    hi,
+                    int(np.searchsorted(ends, byte0 + self.max_bytes, side="right")),
+                )
+                if hi <= row0:
+                    raise ValueError(
+                        f"row {row0} of the request is {int(ends[row0] - byte0)} "
+                        f"bytes — larger than the biggest bucket "
+                        f"({self.max_bytes} bytes); no row-aligned split exists"
+                    )
+                part = buf[byte0 : int(ends[hi - 1])]
+                parts.append(
+                    StreamRequest(part, n_rows=hi - row0, n_bytes=int(part.size))
+                )
+                row0, byte0 = hi, int(ends[hi - 1])
+        else:
+            cols = req.payload
+            for lo in range(0, req.n_rows, self.max_rows):
+                hi = min(lo + self.max_rows, req.n_rows)
+                parts.append(
+                    StreamRequest(
+                        {k: v[lo:hi] for k, v in cols.items()},
+                        n_rows=hi - lo,
+                        n_bytes=0,
+                    )
+                )
+        return parts
 
     def fits(self, rows: int, nbytes: int, req: StreamRequest) -> bool:
         """Whether ``req`` still fits a batch already holding rows/bytes."""

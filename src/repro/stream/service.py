@@ -22,7 +22,12 @@ request stream:
     :class:`~repro.core.vocab.VocabState` deltas fold into the service's
     state with the commutative-monoid ``vocab.merge`` and the
     re-finalized vocabulary is swapped in **atomically between steps**,
-    so no request ever sees a half-updated table;
+    so no request ever sees a half-updated table. The service can also
+    run loop ① *itself* on a payload (``absorb``): the chunk goes
+    through the compiled plan's vocab half — the fused single-pass
+    Modulus → scatter-min dispatch (kernels/fused_vocab) when
+    ``use_fused_vocab`` is on — and the resulting delta merges in
+    through the same refresh path;
   * **graceful drain/shutdown** — ``drain`` waits for every accepted
     request; ``stop`` drains then joins the loop (idempotent).
 
@@ -38,6 +43,10 @@ from __future__ import annotations
 import queue
 import threading
 import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.core import pipeline as pipeline_lib
 from repro.core import vocab as vocab_lib
@@ -100,6 +109,17 @@ class StreamingPreprocessService:
                 f"vocab_state shape {got} does not match the plan's vocab "
                 f"layout {want}; build loop ① with the same PipelineConfig.plan"
             )
+        # Loop-① ingestion engine for absorb(): executes the SAME compiled
+        # plan's vocab half as the offline engines — including the fused
+        # single-pass Modulus → scatter-min dispatch when the config's
+        # `use_fused_vocab` hint is on — so online-ingested deltas are
+        # bit-identical to offline-built ones.
+        self._ingest = pipeline_lib.PiperPipeline(config)
+        # reuse the pipeline's cached jitted step (the same convention as
+        # FrozenVocabTransform sharing _jit_transform_chunk) — a second
+        # jax.jit wrapper would duplicate the trace/compile cache
+        self._ingest_step = self._ingest._jit_vocab_step
+        self._absorb_lock = threading.Lock()
         self.metrics = metrics_lib.ServiceMetrics()
         self._ingress: queue.Queue = queue.Queue(maxsize=queue_depth)
         self._carry: scheduler_lib.StreamRequest | None = None
@@ -162,23 +182,53 @@ class StreamingPreprocessService:
     # ------------------------------------------------------------------ #
     # client surface
     # ------------------------------------------------------------------ #
-    def submit(self, payload, timeout: float | None = None) -> scheduler_lib.StreamRequest:
+    def submit(self, payload, timeout: float | None = None):
         """Enqueue one request; returns its handle.
 
         Blocks (up to ``timeout``) while the bounded ingress is full —
         that *is* the backpressure: a producer outrunning the device is
         slowed at submission instead of ballooning host memory.
+
+        A request larger than the biggest bucket is split at whole-row
+        boundaries into bucket-sized sub-chunks
+        (:meth:`~repro.stream.scheduler.MicroBatchScheduler.split`) and
+        served behind one
+        :class:`~repro.stream.scheduler.CompositeRequest` handle whose
+        ``result()`` reassembles the parts' row spans in order. If the
+        ingress fills mid-split, the parts already enqueued still
+        complete — the raised ``queue.Full`` tells the caller the
+        request was not fully admitted, and carries the admitted-prefix
+        handle as ``exc.partial_request`` (a
+        :class:`~repro.stream.scheduler.CompositeRequest`, absent when
+        nothing was admitted) so those rows stay waitable and a retry
+        can resubmit only the remainder.
         """
-        if self._thread is None:
-            raise RuntimeError("service not started")
         req = scheduler_lib.make_request(payload, self.config)
         if not self.scheduler.admits(req):
-            raise ValueError(
-                f"request of {req.n_rows} rows / {req.n_bytes} bytes exceeds the "
-                f"largest bucket ({self.scheduler.max_rows} rows / "
-                f"{self.scheduler.max_bytes} bytes); route bulk jobs through the "
-                f"offline engines"
-            )
+            # one TOTAL deadline across parts (the documented "blocks up
+            # to timeout" bound), not a per-part allowance
+            deadline = None if timeout is None else time.monotonic() + timeout
+            handles: list[scheduler_lib.StreamRequest] = []
+            for p in self.scheduler.split(req):
+                left = (
+                    None
+                    if deadline is None
+                    else max(0.0, deadline - time.monotonic())
+                )
+                try:
+                    handles.append(self._enqueue(p, left))
+                except BaseException as e:
+                    if handles:
+                        e.partial_request = scheduler_lib.CompositeRequest(handles)
+                    raise
+            return scheduler_lib.CompositeRequest(handles)
+        return self._enqueue(req, timeout)
+
+    def _enqueue(
+        self, req: scheduler_lib.StreamRequest, timeout: float | None = None
+    ) -> scheduler_lib.StreamRequest:
+        if self._thread is None:
+            raise RuntimeError("service not started")
         with self._submit_lock:
             if self._stop_evt.is_set():
                 raise RuntimeError("streaming service is stopping")
@@ -246,6 +296,73 @@ class StreamingPreprocessService:
                 self._pending_delta = delta_state
             else:
                 self._pending_delta = vocab_lib.merge(self._pending_delta, delta_state)
+
+    def absorb(self, payload, row_offset: int | None = None) -> None:
+        """Run loop ① on one payload and fold the delta into the serving
+        vocabulary — the online half of the incremental refresh.
+
+        :meth:`refresh_vocab` consumes loop-① states built *elsewhere*;
+        ``absorb`` builds one *here*, executing the compiled plan's
+        vocab half on the payload — i.e. the fused single-pass
+        Modulus → GenVocab scatter-min dispatch (kernels/fused_vocab)
+        when ``config.use_fused_vocab`` is on — and then folds it in via
+        the same commutative-monoid :meth:`refresh_vocab` path (applied
+        atomically between micro-batch steps).
+
+        ``row_offset`` seeds the chunk's global first-occurrence
+        positions. Default (None): the rows the service has already
+        absorbed (merged state + pending deltas), i.e. sequential
+        ingestion order. Pass explicit offsets to replicate a specific
+        offline row order bit-for-bit. Concurrent default-offset absorbs
+        are serialized by an internal lock.
+
+        Accepts the same payload formats as :meth:`submit`; one payload
+        must fit the config's chunk geometry (``max_rows_per_chunk`` /
+        ``chunk_bytes``) — slice bulk ingests into chunks first.
+        """
+        req = scheduler_lib.make_request(payload, self.config)
+        cfg = self.config
+        if req.n_rows > cfg.max_rows_per_chunk or (
+            cfg.input_format == "utf8" and req.n_bytes > cfg.chunk_bytes
+        ):
+            raise ValueError(
+                f"absorb payload of {req.n_rows} rows / {req.n_bytes} bytes "
+                f"exceeds the chunk geometry ({cfg.max_rows_per_chunk} rows / "
+                f"{cfg.chunk_bytes} bytes); slice bulk ingests into chunks"
+            )
+        with self._absorb_lock:
+            if row_offset is None:
+                with self._vocab_lock:
+                    pending = self._pending_delta
+                    row_offset = int(self._state.rows_seen) + (
+                        int(pending.rows_seen) if pending is not None else 0
+                    )
+            if cfg.input_format == "utf8":
+                chunk = np.zeros(cfg.chunk_bytes, np.uint8)
+                chunk[: req.n_bytes] = req.payload
+            else:
+                cap = cfg.max_rows_per_chunk
+                sch = cfg.schema
+                chunk = {
+                    "label": np.zeros(cap, np.int32),
+                    "dense": np.zeros((cap, sch.n_dense), np.int32),
+                    "sparse": np.zeros((cap, sch.n_sparse), np.int32),
+                    "valid": np.arange(cap) < req.n_rows,
+                }
+                for k in ("label", "dense", "sparse"):
+                    chunk[k][: req.n_rows] = req.payload[k]
+            base = self._ingest.init_state()
+            base = vocab_lib.VocabState(
+                first_pos=base.first_pos, rows_seen=jnp.int32(row_offset)
+            )
+            st = self._ingest_step(base, jax.tree.map(jnp.asarray, chunk))
+            # the delta carries only ITS valid-row count: merge() sums
+            # rows_seen, so the offset must not be double-counted
+            delta = vocab_lib.VocabState(
+                first_pos=st.first_pos,
+                rows_seen=st.rows_seen - jnp.int32(row_offset),
+            )
+            self.refresh_vocab(delta)
 
     @property
     def vocab_state(self) -> vocab_lib.VocabState:

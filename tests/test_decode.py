@@ -79,6 +79,32 @@ def test_decode_empty_fields():
     assert int(batch.valid.sum()) == 2
 
 
+def test_kernel_decode_rejects_permuted_hex_layout():
+    """The kernel wrapper assumes the contiguous decimal-then-hex layout;
+    a permuted ``hex_field_table`` must raise a clear error instead of
+    silently decoding hex columns with base 10 (regression: the wrapper
+    used to ``del`` the table unchecked)."""
+    schema = schema_lib.TableSchema(n_dense=2, n_sparse=2)
+    buf = synth.pad_bytes(b"1\t2\t3\tabc\tdef\n")
+    good = jnp.asarray(schema.field_is_hex())
+    kw = dict(
+        n_fields=schema.n_fields,
+        max_rows=4,
+        n_dense=schema.n_dense,
+        n_sparse=schema.n_sparse,
+    )
+    # the implied layout passes (sanity: validation is not over-strict)
+    dops.decode(jnp.asarray(buf), good, **kw)
+    permuted = np.array([False, True, False, False, True])  # hex ∉ tail slice
+    with pytest.raises(ValueError, match="decimal-then-hex"):
+        dops.decode(jnp.asarray(buf), jnp.asarray(permuted), **kw)
+    with pytest.raises(ValueError, match="decimal-then-hex"):  # wrong length
+        dops.decode(jnp.asarray(buf), jnp.asarray(permuted[:3]), **kw)
+    # the ref decoder handles the permuted layout (the suggested fallback)
+    out = dref.decode_bytes(jnp.asarray(buf), jnp.asarray(permuted), **kw)
+    assert int(out[3].sum()) == 1
+
+
 def test_decode_overflow_wraps_like_serial():
     """8-hex-digit hashes overflow int32; wrap must match the register."""
     schema = schema_lib.TableSchema(n_dense=0, n_sparse=1)

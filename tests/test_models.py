@@ -115,9 +115,11 @@ def test_unroll_consistency():
     m1 = lm_lib.LM(cfg, remat=False)
     m2 = lm_lib.LM(cfg, remat=False, unroll=True)
     params = m1.init(key)
-    # bf16 compute: scan vs unrolled graphs fuse differently, so the
-    # losses agree only to bf16 noise (~1e-3 relative on a ~7.0 loss)
-    assert abs(float(m1.loss(params, tokens)) - float(m2.loss(params, tokens))) < 1e-2
+    # fp32 residual carry + per-superblock optimization barriers + the
+    # compiled (not op-by-op eager) unrolled loop make the two lowerings
+    # round identically; 5e-3 is the original (pre-relaxation) tolerance
+    # and in practice the drift is exactly 0.0
+    assert abs(float(m1.loss(params, tokens)) - float(m2.loss(params, tokens))) < 5e-3
 
 
 def test_moe_capacity_drops_are_bounded():

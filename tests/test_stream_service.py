@@ -223,17 +223,74 @@ def test_backpressure_bounded_ingress(criteo_small):
     assert snap["p99_ms"] >= snap["p50_ms"] >= 0
 
 
-def test_oversized_request_rejected(criteo_small):
+def test_oversized_request_split_utf8(criteo_small):
+    """A utf8 request larger than the biggest bucket is split into
+    bucket-sized whole-row sub-chunks whose row spans reassemble — the
+    composite result is bit-identical to the offline reference."""
     buf, _, cfg = criteo_small
     pc = P.PipelineConfig(schema=cfg.schema)
     pipe = P.PiperPipeline(pc)
     state = pipe.build_state_stream(synth.chunk_stream(buf, 16384))
+    ref_lab, ref_den, ref_spa = _offline_reference(pipe, buf)
     spans = synth.row_spans(buf)
-    svc = StreamingPreprocessService(pc, state, bucket_rows=(32, 64), queue_depth=2)
+    svc = StreamingPreprocessService(pc, state, bucket_rows=(32, 64), queue_depth=8)
     with svc:
-        with pytest.raises(ValueError, match="largest bucket"):
-            svc.submit(buf[: spans[-1, 1]])  # 400 rows > 64-row max bucket
+        h = svc.submit(buf[: spans[-1, 1]])  # 400 rows > 64-row max bucket
+        assert isinstance(h, scheduler_lib.CompositeRequest)
+        assert h.n_rows == cfg.rows and len(h.parts) == -(-cfg.rows // 64)
+        out = h.result(timeout=120)
+        assert h.done and h.latency_s is not None
+    np.testing.assert_array_equal(out["label"], ref_lab)
+    np.testing.assert_array_equal(out["sparse"], ref_spa)
+    np.testing.assert_array_equal(out["dense"], ref_den)
     svc.stop()  # idempotent second stop
+
+
+def test_oversized_request_split_over_16ki_rows():
+    """A binary request bigger than the largest DEFAULT bucket (16Ki
+    rows) splits into 16Ki-row sub-chunks and reassembles exactly."""
+    schema = schema_lib.TableSchema(n_dense=2, n_sparse=3, vocab_range=64)
+    pc = P.PipelineConfig(schema=schema, input_format="binary")
+    rows = (1 << 14) + 2048  # 18432 > the 16Ki default max bucket
+    rng = np.random.default_rng(11)
+    table = {
+        "label": rng.integers(0, 2, rows).astype(np.int32),
+        "dense": rng.integers(-40, 400, (rows, 2)).astype(np.int32),
+        "sparse": rng.integers(-(2**31), 2**31 - 1, (rows, 3), dtype=np.int64).astype(
+            np.int32
+        ),
+    }
+    pipe = P.PiperPipeline(pc)
+    chunk = {k: jnp.asarray(v) for k, v in table.items()}
+    state = pipe.build_state_stream([dict(chunk, valid=jnp.ones(rows, bool))])
+    vocab = vocab_lib.finalize(state)
+    ref = pipe.transform_chunk(vocab, dict(chunk, valid=jnp.ones(rows, bool)))
+
+    svc = StreamingPreprocessService(pc, state, queue_depth=8)  # default buckets
+    assert svc.scheduler.max_rows == 16384
+    with svc:
+        h = svc.submit(table)
+        assert isinstance(h, scheduler_lib.CompositeRequest)
+        assert [p.n_rows for p in h.parts] == [16384, rows - 16384]
+        out = h.result(timeout=300)
+    np.testing.assert_array_equal(out["label"], np.asarray(ref.label))
+    np.testing.assert_array_equal(out["sparse"], np.asarray(ref.sparse))
+    np.testing.assert_array_equal(out["dense"], np.asarray(ref.dense))
+
+
+def test_split_single_oversized_row_rejected():
+    """No row-aligned split exists when one row alone exceeds the byte
+    capacity — that (and only that) still raises a clear error."""
+    schema = schema_lib.TableSchema(n_dense=2, n_sparse=2, vocab_range=64)
+    pc = P.PipelineConfig(schema=schema)
+    state = vocab_lib.VocabState.init(2, 64)
+    svc = StreamingPreprocessService(
+        pc, state, bucket_rows=(4,), bytes_per_row=8, queue_depth=2
+    )
+    giant_row = ("1\t" + "9" * 40 + "\t2\tabc\tdef\n").encode()
+    with svc:
+        with pytest.raises(ValueError, match="no row-aligned split"):
+            svc.submit(np.frombuffer(giant_row * 8, np.uint8))
 
 
 def test_make_request_validation():
