@@ -1,0 +1,229 @@
+"""Bytes-in fused kernels (decode folded into both loops) vs. the
+decode-then-fused chains they replace.
+
+Times one chunk's loop-① state update and loop-② transform both ways on
+the same device-resident UTF-8 byte buffer, for both memory tiers:
+
+  * ``vmem`` — the paper's 5K vocab point: each loop is ONE Pallas
+    dispatch from raw bytes (kernels/fused_decode_vocab,
+    kernels/fused_decode_xform) — the decoded field table never
+    materializes in HBM;
+  * ``hbm``  — the paper's 1M vocab point: the bytes-in wrappers fall
+    back to decode + the decoded-input fused chains, so both variants
+    issue the same work (the fallback IS the baseline).
+
+Besides wall time, each tier reports **dispatches per chunk** (jaxpr
+primitives before XLA fusion, pjit bodies counted recursively — see
+``benchmarks.fused_vocab.count_dispatches``). The baseline —
+decode-then-fused, i.e. the decode ``pallas_call`` followed by the
+fused loop kernel ``pallas_call`` — needs at least two kernel launches
+with the decoded [rows, n_fields] table round-tripping HBM between
+them; the VMEM-tier bytes-in path folds them into ONE, so its count is
+strictly lower. That is the acceptance gate the CI decode job pins.
+
+Output: the usual ``name,us_per_call,derived`` CSV rows plus one
+machine-readable JSON line per loop × tier:
+
+    decode_json/{loop}/{tier} {"rows": ..., "fused_rows_per_s": ...,
+        "baseline_rows_per_s": ..., "speedup": ...,
+        "fused_dispatches": ..., "baseline_dispatches": ...}
+
+On CPU both kernels run ``interpret=True`` (the Pallas interpreter), so
+absolute times measure plumbing, not silicon — the benchmark's CI job
+is a rot-guard for the bytes-in harness; on a TPU the same script
+reports the HBM-touch-once win. The CI decode job runs
+``python benchmarks/fused_decode.py --rows 4096 --json-out
+BENCH_decode.json``.
+
+    PYTHONPATH=src python benchmarks/fused_decode.py [--rows N]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+if __package__ in (None, ""):  # direct script invocation
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+    sys.path.insert(0, _ROOT)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from benchmarks.fused_vocab import count_dispatches
+from repro.core import schema as schema_lib, vocab as vocab_lib
+from repro.data import synth
+from repro.kernels.decode_utf8 import ops as decode_ops
+from repro.kernels.fused_decode_vocab import ops as fdv_ops
+from repro.kernels.fused_decode_xform import ops as fdx_ops
+from repro.kernels.fused_vocab import ops as fv_ops
+from repro.kernels.fused_xform import ops as fx_ops
+
+ROWS = 4096
+# The paper's two evaluation points; 1M exceeds the per-column VMEM
+# cutoff, so the bytes-in wrappers take their decode + fused-chain
+# fallback there.
+TIER_SCHEMAS = {
+    "vmem": schema_lib.CRITEO,
+    "hbm": schema_lib.CRITEO_1M,
+}
+
+
+def _chunk(schema: schema_lib.TableSchema, rows: int):
+    cfg = synth.SynthConfig(schema=schema, rows=rows, seed=7)
+    table = synth.generate_binary(cfg)
+    raw = synth.encode_utf8(table, cfg)
+    # pad to the byte-tile multiple so neither variant pays a pad op
+    buf = synth.pad_bytes(raw, multiple=2048)
+    return jnp.asarray(buf)
+
+
+def run_tier(tier: str, rows: int) -> None:
+    schema = TIER_SCHEMAS[tier]
+    max_rows = rows  # one chunk holds the whole buffer
+    assert fv_ops.fused_vocab_tier(schema.n_sparse, schema.vocab_range) == tier
+    assert (
+        fdx_ops.fused_decode_tier(
+            schema.n_dense, schema.n_sparse, schema.vocab_range, max_rows
+        )
+        == tier
+    )
+    buf = _chunk(schema, rows)
+    hex_table = jnp.asarray(schema.field_is_hex())
+    kw = dict(
+        n_fields=schema.n_fields,
+        max_rows=max_rows,
+        n_dense=schema.n_dense,
+        n_sparse=schema.n_sparse,
+    )
+    hex_start = 1 + schema.n_dense
+
+    def fresh():
+        return vocab_lib.VocabState.init(schema.n_sparse, schema.vocab_range)
+
+    # ---------------- loop ① — bytes → vocab delta ---------------- #
+    # fused: the bytes-in kernel (VMEM tier) / its fallback (HBM tier)
+    fused_v = jax.jit(
+        lambda b: fdv_ops.fused_decode_update(
+            fresh(), b, n_fields=schema.n_fields, hex_start=hex_start,
+            max_rows=max_rows,
+        )
+    )
+
+    # baseline: the PR-5 state of the art — decode kernel dispatch, then
+    # the fused Modulus → scatter-min kernel dispatch, decoded table
+    # round-tripping HBM in between.
+    def baseline_vocab(b):
+        _, _, sparse, valid = decode_ops.decode(b, hex_table, **kw)
+        return fv_ops.fused_update(fresh(), sparse, valid)
+
+    base_v = jax.jit(baseline_vocab)
+
+    # Differential guard: a benchmark that drifts from its baseline
+    # would report a meaningless speedup.
+    st_f, st_b = fused_v(buf), base_v(buf)
+    np.testing.assert_array_equal(
+        np.asarray(st_f.first_pos), np.asarray(st_b.first_pos)
+    )
+    assert int(st_f.rows_seen) == int(st_b.rows_seen)
+
+    d_fused = count_dispatches(fused_v, buf)
+    d_base = count_dispatches(base_v, buf)
+    if tier == "vmem":
+        assert d_fused < d_base, (d_fused, d_base)
+    _report("loop1", tier, rows, schema, fused_v, base_v, buf, d_fused, d_base)
+
+    # ---------------- loop ② — bytes → features ------------------- #
+    vocab = vocab_lib.finalize(st_b)
+    fused_x = jax.jit(
+        lambda v, b: fdx_ops.fused_decode_transform(
+            v, b, n_fields=schema.n_fields, hex_start=hex_start,
+            max_rows=max_rows,
+        )
+    )
+
+    def baseline_xform(v, b):
+        label, dense, sparse, valid = decode_ops.decode(b, hex_table, **kw)
+        ids, dfx = fx_ops.fused_transform(v, sparse, dense)
+        return label, dfx, ids, valid
+
+    base_x = jax.jit(baseline_xform)
+
+    out_f, out_b = fused_x(vocab, buf), base_x(vocab, buf)
+    for a, b_, name in zip(out_f, out_b, ("label", "dense", "ids", "valid")):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b_), err_msg=name
+        )
+
+    d_fused = count_dispatches(fused_x, vocab, buf)
+    d_base = count_dispatches(base_x, vocab, buf)
+    if tier == "vmem":
+        assert d_fused < d_base, (d_fused, d_base)
+    _report(
+        "loop2", tier, rows, schema, lambda b: fused_x(vocab, b),
+        lambda b: base_x(vocab, b), buf, d_fused, d_base,
+    )
+
+
+def _report(loop, tier, rows, schema, fused, base, buf, d_fused, d_base):
+    t_fused = time_fn(fused, buf)
+    t_base = time_fn(base, buf)
+    fused_rps = rows / t_fused
+    base_rps = rows / t_base
+    speedup = t_base / t_fused
+    emit(
+        f"decode/{loop}/{tier}",
+        t_fused,
+        f"rows_per_s={fused_rps:.0f};baseline_rows_per_s={base_rps:.0f};"
+        f"speedup={speedup:.3f};rows={rows};"
+        f"fused_dispatches={d_fused};baseline_dispatches={d_base}",
+    )
+    print(
+        f"decode_json/{loop}/{tier} "
+        + json.dumps(
+            {
+                "rows": rows,
+                "vocab_range": schema.vocab_range,
+                "fused_rows_per_s": round(fused_rps),
+                "baseline_rows_per_s": round(base_rps),
+                "speedup": round(speedup, 4),
+                "fused_dispatches": d_fused,
+                "baseline_dispatches": d_base,
+            }
+        )
+    )
+
+
+def main(rows: int = ROWS) -> None:
+    for tier in ("vmem", "hbm"):
+        run_tier(tier, rows)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rows", type=int, default=ROWS)
+    ap.add_argument(
+        "--json-out",
+        default="",
+        help="dump this run's rows machine-readably (the CI decode job "
+        "passes BENCH_decode.json), same shape as benchmarks.run",
+    )
+    args = ap.parse_args()
+    from benchmarks import common as _common
+
+    mark = len(_common.RECORDS)
+    main(rows=args.rows)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(
+                {"sections": {"decode": _common.RECORDS[mark:]}, "failures": []},
+                f,
+                indent=2,
+            )
+        print(f"# wrote {args.json_out} ({len(_common.RECORDS) - mark} rows)")

@@ -23,6 +23,7 @@ from benchmarks import (
     fig8_cpu_scaling,
     fig9_end2end,
     fig10_breakdown,
+    fused_decode,
     fused_vocab,
     fused_xform,
     plan_bench,
@@ -48,6 +49,9 @@ SECTIONS = {
     # fused single-pass loop-① (GenVocab) kernel vs unfused chain; the
     # CI vocab job dumps it as BENCH_vocab.json via --json-out
     "vocab": fused_vocab.main,
+    # bytes-in fused kernels (decode folded into both loops) vs the
+    # decode-then-fused chains; CI decode job dumps BENCH_decode.json
+    "decode": fused_decode.main,
     # compiled-plan vs legacy loop-② throughput + a crossed-feature plan
     "plan": plan_bench.main,
 }

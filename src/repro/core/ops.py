@@ -148,6 +148,104 @@ def fused_vocab_update(
     return vocab_lib.update(state, modded, valid)
 
 
+def fused_decode_transform(
+    vocab: vocab_lib.Vocabulary,
+    byte_buf: jnp.ndarray,
+    *,
+    n_fields: int,
+    n_dense: int,
+    n_sparse: int,
+    max_rows: int,
+    use_kernel: bool = True,
+):
+    """The ENTIRE loop ② — Decode → Modulus → ApplyVocab ∥ Neg2Zero →
+    Logarithm — as ONE dispatch from raw UTF-8 bytes (paper §3.3 + §3.2:
+    decode is part of the accelerated dataflow; nothing materializes
+    between it and the transforms).
+
+    With ``use_kernel`` the chain runs through the bytes-in Pallas kernel
+    (kernels/fused_decode_xform), tier-routed: vocabulary stack + output
+    table within the VMEM budget stay resident on-chip for the whole
+    call; otherwise the chunk decodes via the reference scan and takes
+    the existing ``fused_transform`` chain. Without it, the unfused
+    composition — reference decode + per-op chain — is the differential
+    oracle. Sparse ids/labels bit-identical, dense identical-formula,
+    padding rows included, on every path.
+
+    byte_buf uint8 [B] — whole rows + zero padding, any length.
+    → (label int32 [max_rows], dense f32 [max_rows, n_dense],
+       ids int32 [max_rows, n_sparse], valid bool [max_rows]).
+    """
+    hex_start = 1 + n_dense
+    if use_kernel:
+        from repro.kernels.fused_decode_xform import ops as fdx_ops
+
+        return fdx_ops.fused_decode_transform(
+            vocab,
+            byte_buf,
+            n_fields=n_fields,
+            hex_start=hex_start,
+            max_rows=max_rows,
+        )
+    from repro.kernels.decode_utf8 import ref as decode_ref
+
+    label, dense, sparse, valid = decode_ref.decode_bytes(
+        byte_buf,
+        jnp.arange(n_fields) >= hex_start,
+        n_fields=n_fields,
+        max_rows=max_rows,
+        n_dense=n_dense,
+        n_sparse=n_sparse,
+    )
+    modded = positive_modulus(sparse, vocab.vocab_range)
+    return label, dense_transform(dense), apply_vocab(vocab, modded), valid
+
+
+def fused_decode_vocab_update(
+    state: vocab_lib.VocabState,
+    byte_buf: jnp.ndarray,
+    *,
+    n_fields: int,
+    n_dense: int,
+    n_sparse: int,
+    max_rows: int,
+    use_kernel: bool = True,
+) -> vocab_lib.VocabState:
+    """The ENTIRE loop ① — Decode → Modulus → GenVocab scatter-min — as
+    ONE dispatch from raw UTF-8 bytes (kernels/fused_decode_vocab),
+    tier-routed like :func:`fused_vocab_update` with the same VMEM
+    residency budget. Without ``use_kernel``, the unfused composition
+    (reference decode + modulus + XLA scatter-min) is the oracle —
+    **bit-identical** state either way.
+
+    With ``use_kernel`` the input ``state`` is **consumed** (donated);
+    thread the returned state through, as every engine's loop ① does.
+    """
+    hex_start = 1 + n_dense
+    if use_kernel:
+        from repro.kernels.fused_decode_vocab import ops as fdv_ops
+
+        return fdv_ops.fused_decode_update(
+            state,
+            byte_buf,
+            n_fields=n_fields,
+            hex_start=hex_start,
+            max_rows=max_rows,
+        )
+    from repro.kernels.decode_utf8 import ref as decode_ref
+
+    _, _, sparse, valid = decode_ref.decode_bytes(
+        byte_buf,
+        jnp.arange(n_fields) >= hex_start,
+        n_fields=n_fields,
+        max_rows=max_rows,
+        n_dense=n_dense,
+        n_sparse=n_sparse,
+    )
+    modded = positive_modulus(sparse, int(state.first_pos.shape[1]))
+    return vocab_lib.update(state, modded, valid)
+
+
 def apply_vocab(
     vocab: vocab_lib.Vocabulary, modded: jnp.ndarray, use_kernel: bool = False
 ) -> jnp.ndarray:

@@ -34,9 +34,14 @@ the paper's no-intermediate-materialization dataflow. Loop ① gets the
 matching treatment (``PipelineConfig.use_fused_vocab``;
 kernels/fused_vocab): the row tile's uint32 Modulus and the GenVocab
 scatter-min into the VMEM-resident ``VocabState`` fuse into one
-dispatch, completing the "both loops single-pass" story. Defaults
-(None) auto-enable both wherever Pallas compiles (TPU backend); the
-unfused per-op chains remain the differential oracles (knob False).
+dispatch, completing the "both loops single-pass" story. For utf8
+feeds, ``PipelineConfig.use_fused_decode`` pushes the fusion one stage
+earlier: Decode itself joins both kernels
+(kernels/fused_decode_vocab, kernels/fused_decode_xform), so each loop
+goes raw bytes → features in ONE dispatch and the decoded field table
+never materializes in HBM. Defaults (None) auto-enable all three
+wherever Pallas compiles (TPU backend); the unfused per-op chains
+remain the differential oracles (knob False).
 """
 
 from __future__ import annotations
@@ -88,6 +93,24 @@ class PipelineConfig:
     # State is bit-identical to the unfused chain either way —
     # scatter-min is order-independent.
     use_fused_vocab: bool | None = None
+    # COMPILER HINT — fuse Decode itself into both loop kernels for utf8
+    # feeds: loop ① runs bytes → Modulus → GenVocab scatter-min and loop
+    # ② runs bytes → Modulus → ApplyVocab ∥ Neg2Zero → Logarithm as ONE
+    # Pallas dispatch each (kernels/fused_decode_vocab,
+    # kernels/fused_decode_xform), so a UTF-8 chunk touches HBM once —
+    # the decoded field table never materializes. Applies only when
+    # `input_format == "utf8"` (binary feeds — the paper's Config III —
+    # skip decode entirely) and only for plans that are the identity
+    # over the wire layout (the compiler records admissibility as
+    # `CompiledPlan.decode_*_dispatch`); per-chunk the wrappers still
+    # tier-route against the shared 8 MiB VMEM residency budget and
+    # fall back to decode + the decoded-input chains beyond it. Same
+    # auto semantics as the other fused hints: None resolves via
+    # `kernels.resolve_fused()` (on iff Pallas *compiles*, i.e. TPU
+    # backend; CPU interpret mode is opt-in via True, which is what the
+    # differential tests do). Outputs are bit-identical on sparse
+    # ids/labels/state and identical-formula on dense either way.
+    use_fused_decode: bool | None = None
     # The declarative per-column preprocessing program (core/plan.py).
     # None = `plan.criteo_default(schema)` — the paper's exact chain, so
     # every pre-IR call site keeps its behavior bit-for-bit. Compiled once
@@ -120,6 +143,17 @@ class PipelineConfig:
             return kernels_lib.resolve_fused()
         return self.use_fused_vocab
 
+    @property
+    def fused_decode_enabled(self) -> bool:
+        """The resolved ``use_fused_decode`` hint (None → on iff the
+        Pallas toolchain imports and it compiles on this backend —
+        ``kernels.resolve_fused``). Only consulted for utf8 feeds."""
+        if self.use_fused_decode is None:
+            from repro import kernels as kernels_lib
+
+            return kernels_lib.resolve_fused()
+        return self.use_fused_decode
+
     def resolved_plan(self) -> plan_lib.PreprocPlan:
         """The plan this config executes (None → the Criteo default)."""
         return self.plan if self.plan is not None else plan_lib.criteo_default(self.schema)
@@ -142,6 +176,16 @@ class PiperPipeline:
             fused=config.fused_enabled,
             use_kernels=config.use_kernels,
             fused_vocab=config.fused_vocab_enabled,
+            fused_decode=config.fused_decode_enabled,
+        )
+        # Bytes-in routing is static per engine: utf8 feed + an identity-
+        # layout plan + the hint on. The per-chunk VMEM/HBM tier choice
+        # stays inside the ops wrappers (it depends on max_rows).
+        self._bytes_vocab = (
+            config.input_format == "utf8" and self.compiled.decode_vocab_dispatch
+        )
+        self._bytes_xform = (
+            config.input_format == "utf8" and self.compiled.decode_xform_dispatch
         )
         self._hex_table = jnp.asarray(self.schema.field_is_hex())
         # jitted chunk steps are cached on the instance: re-jitting per
@@ -203,6 +247,14 @@ class PiperPipeline:
     def vocab_step(
         self, state: vocab_lib.VocabState, chunk
     ) -> vocab_lib.VocabState:
+        if self._bytes_vocab:
+            # bytes-in loop ①: the raw chunk IS the kernel input — no
+            # decoded field table ever materializes (tier-routed; the
+            # wrapper falls back to decode + the decoded-input chain on
+            # the HBM tier). Bit-identical to the branch below.
+            return self.compiled.vocab_step_bytes(
+                state, chunk, max_rows=self.config.max_rows_per_chunk
+            )
         return self.compiled.vocab_step(state, self._as_batch(chunk))
 
     def build_state_stream(self, chunks: Iterable) -> vocab_lib.VocabState:
@@ -240,6 +292,13 @@ class PiperPipeline:
     def transform_chunk(
         self, vocabulary: vocab_lib.Vocabulary, chunk
     ) -> schema_lib.ProcessedBatch:
+        if self._bytes_xform:
+            # bytes-in loop ②: raw UTF-8 straight to the final features in
+            # one dispatch (tier-routed; HBM tier falls back to decode +
+            # the decoded-input chain). Bit-identical to the branch below.
+            return self.compiled.transform_bytes(
+                vocabulary, chunk, max_rows=self.config.max_rows_per_chunk
+            )
         return self.compiled.transform(vocabulary, self._as_batch(chunk))
 
     def frozen_transform(

@@ -242,12 +242,14 @@ class CompiledPlan:
         fused: bool,
         use_kernels: bool,
         fused_vocab: bool = False,
+        fused_decode: bool = False,
     ):
         validate_plan(plan, schema)
         self.plan = plan
         self.schema = schema
         self.fused = fused
         self.fused_vocab = fused_vocab
+        self.fused_decode = fused_decode
         self.use_kernels = use_kernels
         self.n_dense_out = plan.n_dense_out
         self.n_sparse_out = plan.n_sparse_out
@@ -341,6 +343,36 @@ class CompiledPlan:
         self._fused_dense_slots = tuple(fused_dense_slots)
         self._fused_dense_sources = tuple(fused_dense_sources)
 
+        # Bytes-in routing (kernels/fused_decode_*): the decode kernels
+        # scatter every schema column straight into the state / output
+        # table, so they only apply when the plan is the *identity over
+        # the wire layout* — no crossed/subset/permuted sources, every
+        # sparse column a vocab column, the canonical dense chain on
+        # every dense column, nothing routed to XLA stages. Anything
+        # fancier keeps the decoded-input paths (which the bytes-in
+        # wrappers also fall back to on the HBM tier).
+        identity_sparse = tuple(range(schema.n_sparse))
+        identity_dense = tuple(range(schema.n_dense))
+        self.decode_vocab_dispatch = (
+            fused_decode
+            and schema.n_sparse > 0
+            and self._vocab_sources == identity_sparse
+        )
+        self.decode_xform_dispatch = (
+            fused_decode
+            and schema.n_sparse > 0
+            and schema.n_dense > 0
+            and self.n_sparse_out == schema.n_sparse
+            and self.n_dense_out == schema.n_dense
+            and self._apply_slots == tuple(range(self.n_sparse_out))
+            and self._apply_sources == identity_sparse
+            and self._apply_vocab_rows == tuple(range(schema.n_sparse))
+            and self._fused_dense_slots == tuple(range(self.n_dense_out))
+            and self._fused_dense_sources == identity_dense
+            and not self._sparse_xla
+            and not self._dense_xla
+        )
+
     # -- metadata ------------------------------------------------------ #
     @property
     def tier(self) -> str:
@@ -370,6 +402,31 @@ class CompiledPlan:
             return f"fused/{self.vocab_tier}"
         return "unfused"
 
+    @property
+    def decode_vocab_route(self) -> str:
+        """Where a utf8 engine's loop ① enters: ``"bytes/vmem"`` (the
+        bytes-in kernel), ``"bytes/hbm"`` (bytes-in requested but the
+        state over-budget — ref decode + the decoded-input chain), or
+        ``"decoded"`` (decode runs as its own dispatch)."""
+        if self.decode_vocab_dispatch:
+            return f"bytes/{self.vocab_tier}"
+        return "decoded"
+
+    def decode_xform_route(self, max_rows: int) -> str:
+        """Where a utf8 engine's loop ② enters for a given chunk row
+        capacity (the output table shares the VMEM budget, and
+        ``max_rows`` is per-engine — stream buckets shrink it)."""
+        if not self.decode_xform_dispatch:
+            return "decoded"
+        from repro.kernels.fused_decode_xform import ops as fdx_ops
+
+        return "bytes/" + fdx_ops.fused_decode_tier(
+            self.schema.n_dense,
+            self.schema.n_sparse,
+            self.vocab_range,
+            max_rows,
+        )
+
     def describe(self) -> str:
         head = (
             f"CompiledPlan: {self.n_dense_out} dense + {self.n_sparse_out} "
@@ -381,7 +438,14 @@ class CompiledPlan:
             f"[vocab ×{self.n_vocab_columns} → {self.vocab_route}] "
             "Modulus → GenVocab (loop ① scatter-min)"
         )
-        return "\n".join([head, vocab_half] + [g.describe() for g in self.groups])
+        decode_half = (
+            f"[decode → loop① {self.decode_vocab_route}, loop② "
+            f"{'bytes' if self.decode_xform_dispatch else 'decoded'}] "
+            "utf8 bytes-in fusion (kernels/fused_decode_*)"
+        )
+        return "\n".join(
+            [head, vocab_half, decode_half] + [g.describe() for g in self.groups]
+        )
 
     # -- gather / subset / assembly helpers ---------------------------- #
     def _gather_sparse(self, sparse: jnp.ndarray, sources: tuple) -> jnp.ndarray:
@@ -499,6 +563,53 @@ class CompiledPlan:
             return vocab_ops.genvocab_update(state, modded, batch.valid)
         return vocab_lib.update(state, modded, batch.valid)
 
+    def vocab_step_bytes(
+        self,
+        state: vocab_lib.VocabState,
+        byte_buf: jnp.ndarray,
+        *,
+        max_rows: int,
+    ) -> vocab_lib.VocabState:
+        """Loop ① straight from a raw UTF-8 chunk — Decode → Modulus →
+        scatter-min as ONE tier-routed dispatch (kernels/fused_decode_
+        vocab). Only valid when :attr:`decode_vocab_dispatch` is set (the
+        plan is the identity over the wire layout); bit-identical to
+        ``vocab_step`` on the decoded chunk."""
+        return ops.fused_decode_vocab_update(
+            state,
+            byte_buf,
+            n_fields=self.schema.n_fields,
+            n_dense=self.schema.n_dense,
+            n_sparse=self.schema.n_sparse,
+            max_rows=max_rows,
+        )
+
+    def transform_bytes(
+        self,
+        vocabulary: vocab_lib.Vocabulary,
+        byte_buf: jnp.ndarray,
+        *,
+        max_rows: int,
+    ) -> schema_lib.ProcessedBatch:
+        """Loop ② straight from a raw UTF-8 chunk — Decode → Modulus →
+        ApplyVocab ∥ Neg2Zero → Logarithm as ONE tier-routed dispatch
+        (kernels/fused_decode_xform). Only valid when
+        :attr:`decode_xform_dispatch` is set; ids/labels bit-identical
+        and dense identical-formula to ``transform`` on the decoded
+        chunk, padding rows included."""
+        vsub = self._vocab_subset(vocabulary, self._apply_vocab_rows)
+        label, dense, ids, valid = ops.fused_decode_transform(
+            vsub,
+            byte_buf,
+            n_fields=self.schema.n_fields,
+            n_dense=self.schema.n_dense,
+            n_sparse=self.schema.n_sparse,
+            max_rows=max_rows,
+        )
+        return schema_lib.ProcessedBatch(
+            label=label, dense=dense, sparse=ids, valid=valid
+        )
+
     # -- loop ② — frozen-transform half -------------------------------- #
     def transform(
         self, vocabulary: vocab_lib.Vocabulary, batch: schema_lib.TabularBatch
@@ -545,6 +656,7 @@ def compile_plan(
     fused: bool | None = None,
     use_kernels: bool = False,
     fused_vocab: bool | None = None,
+    fused_decode: bool | None = None,
 ) -> CompiledPlan:
     """Validate + group + route ``plan`` into a :class:`CompiledPlan`.
 
@@ -552,19 +664,24 @@ def compile_plan(
     (``None`` re-resolves via ``kernels.resolve_fused()``) for the
     loop-② transform half; ``fused_vocab`` is the matching
     ``PipelineConfig.use_fused_vocab`` hint for the loop-① vocab half
-    (same ``None`` resolution); ``use_kernels`` routes the unfused
-    per-op stages through their Pallas kernels.
+    (same ``None`` resolution); ``fused_decode`` is the matching
+    ``PipelineConfig.use_fused_decode`` hint for the bytes-in whole-
+    pipeline dispatches (utf8 feeds only — the engines consult the
+    routing, the compiler just records admissibility); ``use_kernels``
+    routes the unfused per-op stages through their Pallas kernels.
     """
-    if fused is None or fused_vocab is None:
+    if fused is None or fused_vocab is None or fused_decode is None:
         from repro import kernels as kernels_lib
 
         resolved = kernels_lib.resolve_fused()
         fused = resolved if fused is None else fused
         fused_vocab = resolved if fused_vocab is None else fused_vocab
+        fused_decode = resolved if fused_decode is None else fused_decode
     return CompiledPlan(
         plan,
         schema,
         fused=bool(fused),
         use_kernels=use_kernels,
         fused_vocab=bool(fused_vocab),
+        fused_decode=bool(fused_decode),
     )

@@ -68,7 +68,12 @@ class ShardedPiperPipeline:
         Modulus → scatter-min dispatch (kernels/fused_vocab) inside
         ``shard_map``, and the monoid ``vocab.merge_tree`` reduction is
         unchanged — fused and unfused shards produce bit-identical
-        states, so they merge interchangeably.
+        states, so they merge interchangeably. And ``use_fused_decode``
+        (utf8 feeds): the inner engine's bytes-in routing fires inside
+        the ``shard_map`` bodies too, so each shard runs raw chunk bytes
+        → vocab delta (loop ①) / → features (loop ②) as one dispatch —
+        the decoded field table never materializes on any shard, and the
+        merge tree still sees bit-identical states.
       mesh: a mesh whose row axes (``'data'``, optionally ``'pod'``) carry
         the shard dimension. Axes other than the row axes are ignored —
         chunks and state are not partitioned over them.

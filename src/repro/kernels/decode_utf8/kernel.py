@@ -82,25 +82,38 @@ def _cumsum_incl(x: jnp.ndarray) -> jnp.ndarray:
     return x
 
 
-def _decode_kernel(
-    bytes_ref,      # uint8 [1, BLOCK] VMEM
-    value_ref,      # int32 [1, BLOCK] VMEM out: completed field values
-    ordinal_ref,    # int32 [1, BLOCK] VMEM out: global delimiter ordinal
-    isdelim_ref,    # int32 [1, BLOCK] VMEM out
-    carry_ref,      # int32 [4] SMEM scratch: (m, a, neg, ndelim)
-    *,
-    n_fields: int,
-    hex_start: int,
-):
-    @pl.when(pl.program_id(0) == 0)
-    def _init():
-        carry_ref[0] = 1  # m: identity affine map
-        carry_ref[1] = 0  # a
-        carry_ref[2] = 0  # neg
-        carry_ref[3] = 0  # ndelim
+def init_carry(carry_ref) -> None:
+    """Seed the SMEM carry ``(m, a, neg, ndelim)`` with the scan identity.
 
-    b = bytes_ref[...].astype(jnp.int32)
+    Shared by every kernel that embeds :func:`decode_block` — call it
+    under ``@pl.when(pl.program_id(0) == 0)`` before the first block.
+    """
+    carry_ref[0] = 1  # m: identity affine map
+    carry_ref[1] = 0  # a
+    carry_ref[2] = 0  # neg
+    carry_ref[3] = 0  # ndelim
 
+
+def decode_block(b, carry_ref, *, n_fields: int, hex_start: int):
+    """One block of the segmented-scan byte decode, carry threaded in SMEM.
+
+    The reusable core of ``_decode_kernel`` — the per-byte classifier
+    (delimiter / minus / digit+base), the Hillis–Steele segmented affine
+    scan, and the cross-block carry fold. The bytes-in fused kernels
+    (kernels/fused_decode_vocab, kernels/fused_decode_xform) embed this
+    same block step so their decode half is the *identical* computation,
+    not a reimplementation.
+
+    Args:
+      b: int32 [1, block] — the block's bytes, widened.
+      carry_ref: int32 [4] SMEM — ``(m, a, neg, ndelim)``; read at entry,
+        **updated in place** to the carry for the next block.
+
+    Returns:
+      (value, ordinal, isdelim) — int32 [1, block] each: the completed
+      field value at delimiter lanes (0 elsewhere), the global delimiter
+      ordinal, and the delimiter mask.
+    """
     is_delim = jnp.logical_or(b == schema_lib.TAB, b == schema_lib.NEWLINE)
     is_minus = b == schema_lib.MINUS
     is_dec = jnp.logical_and(b >= schema_lib.BYTE_0, b <= schema_lib.BYTE_9)
@@ -144,15 +157,36 @@ def _decode_kernel(
     prev_neg = _shift_right(g_neg, 1, 0).at[0, 0].set(c_neg)
     value = jnp.where(prev_neg == 1, -prev_a, prev_a)
 
-    value_ref[...] = jnp.where(is_delim, value, 0)
-    ordinal_ref[...] = excl_global
-    isdelim_ref[...] = delim_i32
-
     # New carry = combine(carry, block_total) = last global element.
     carry_ref[0] = g_m[0, -1]
     carry_ref[1] = g_a[0, -1]
     carry_ref[2] = g_neg[0, -1]
     carry_ref[3] = carry_nd + incl[0, -1]
+
+    return jnp.where(is_delim, value, 0), excl_global, delim_i32
+
+
+def _decode_kernel(
+    bytes_ref,      # uint8 [1, BLOCK] VMEM
+    value_ref,      # int32 [1, BLOCK] VMEM out: completed field values
+    ordinal_ref,    # int32 [1, BLOCK] VMEM out: global delimiter ordinal
+    isdelim_ref,    # int32 [1, BLOCK] VMEM out
+    carry_ref,      # int32 [4] SMEM scratch: (m, a, neg, ndelim)
+    *,
+    n_fields: int,
+    hex_start: int,
+):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        init_carry(carry_ref)
+
+    b = bytes_ref[...].astype(jnp.int32)
+    value, ordinal, isdelim = decode_block(
+        b, carry_ref, n_fields=n_fields, hex_start=hex_start
+    )
+    value_ref[...] = value
+    ordinal_ref[...] = ordinal
+    isdelim_ref[...] = isdelim
 
 
 @functools.partial(

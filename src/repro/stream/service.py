@@ -26,7 +26,9 @@ request stream:
     run loop ① *itself* on a payload (``absorb``): the chunk goes
     through the compiled plan's vocab half — the fused single-pass
     Modulus → scatter-min dispatch (kernels/fused_vocab) when
-    ``use_fused_vocab`` is on — and the resulting delta merges in
+    ``use_fused_vocab`` is on, and with ``use_fused_decode`` on a utf8
+    payload runs raw bytes → vocab delta as ONE dispatch
+    (kernels/fused_decode_vocab) — and the resulting delta merges in
     through the same refresh path;
   * **graceful drain/shutdown** — ``drain`` waits for every accepted
     request; ``stop`` drains then joins the loop (idempotent).
@@ -68,6 +70,12 @@ class StreamingPreprocessService:
         ``use_fused_kernel`` compiler hint is inherited unchanged: the
         plan's canonical groups run as the fused single-pass Pallas chain
         when it is on, the same no-materialization dataflow as offline.
+        So is ``use_fused_decode`` (utf8 requests): every bucket's
+        frozen transform routes its padded byte chunk through the
+        bytes-in loop-② kernel (kernels/fused_decode_xform) — tier-
+        decided against the bucket's own row capacity — and ``absorb``
+        ingests through the bytes-in loop-① kernel, so the online path
+        also touches HBM once per utf8 chunk.
       vocab_state: the **un-finalized** loop-① accumulator from an
         offline run (``PiperPipeline.build_state_stream`` or
         ``ShardedPiperPipeline.build_state_scan``) of the *same plan* —

@@ -1,0 +1,88 @@
+"""Regenerate tests/goldens/decode_fused_small.npz — the bytes-in golden.
+
+The golden is the *final preprocessing table* (valid rows only, in row
+order) for a small deterministic synthetic dataset, produced by the
+unfused single-device reference chain — decode → per-op loop ① / loop ②
+with every fusion knob off — plus a sha256 digest of the integer
+outputs. tests/test_goldens.py asserts the bytes-in fused-decode path
+(``use_fused_decode=True``) reproduces it exactly on every engine:
+single-device, the 8-shard data-parallel engine (subprocess), and the
+online streaming service ingesting the same rows through ``absorb``.
+
+    PYTHONPATH=src python tests/goldens/gen_decode_golden.py
+
+Only rerun this when the decode/transform *intended* semantics change;
+commit the regenerated .npz together with the change that justifies it.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+import sys
+
+sys.path.insert(
+    0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "..", "src")
+)
+
+import numpy as np
+
+# Pinned generation parameters — the tests re-derive their configs from
+# the values stored in the .npz, so these are the single source of truth.
+ROWS = 96
+SEED = 777
+CHUNK_BYTES = 4096
+MAX_ROWS_PER_CHUNK = 128
+OUT = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "decode_fused_small.npz"
+)
+
+
+def digest(label: np.ndarray, sparse: np.ndarray) -> str:
+    h = hashlib.sha256()
+    h.update(np.ascontiguousarray(label, np.int32).tobytes())
+    h.update(np.ascontiguousarray(sparse, np.int32).tobytes())
+    return h.hexdigest()
+
+
+def main() -> None:
+    from repro.core import pipeline as P
+    from repro.data import synth
+
+    cfg = synth.SynthConfig(rows=ROWS, seed=SEED)
+    buf, _ = synth.make_dataset(cfg)
+    pipe = P.PiperPipeline(
+        P.PipelineConfig(
+            schema=cfg.schema,
+            chunk_bytes=CHUNK_BYTES,
+            max_rows_per_chunk=MAX_ROWS_PER_CHUNK,
+            # the golden is the fully-unfused reference chain
+            use_fused_kernel=False,
+            use_fused_vocab=False,
+            use_fused_decode=False,
+        )
+    )
+    outs = list(pipe.run_stream(lambda: synth.chunk_stream(buf, CHUNK_BYTES)))
+    v = [np.asarray(o.valid) for o in outs]
+    label = np.concatenate([np.asarray(o.label)[m] for o, m in zip(outs, v)])
+    dense = np.concatenate([np.asarray(o.dense)[m] for o, m in zip(outs, v)])
+    sparse = np.concatenate([np.asarray(o.sparse)[m] for o, m in zip(outs, v)])
+    assert label.shape[0] == ROWS, label.shape
+
+    np.savez_compressed(
+        OUT,
+        buf=buf,
+        label=label.astype(np.int32),
+        dense=dense.astype(np.float32),
+        sparse=sparse.astype(np.int32),
+        digest=np.str_(digest(label, sparse)),
+        rows=np.int64(ROWS),
+        seed=np.int64(SEED),
+        chunk_bytes=np.int64(CHUNK_BYTES),
+        max_rows_per_chunk=np.int64(MAX_ROWS_PER_CHUNK),
+    )
+    print(f"wrote {OUT}: {ROWS} rows, digest {digest(label, sparse)[:16]}…")
+
+
+if __name__ == "__main__":
+    main()

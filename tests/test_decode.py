@@ -105,6 +105,57 @@ def test_kernel_decode_rejects_permuted_hex_layout():
     assert int(out[3].sum()) == 1
 
 
+def test_kernel_decode_tracer_table_passes_through():
+    """A *traced* ``hex_field_table`` (threaded through as a jit argument
+    instead of closed over) cannot be inspected — ``_check_layout`` must
+    let it through, and the decode must still match the eager call with
+    the same concrete table (regression for the tracer branch)."""
+    import jax
+
+    schema = schema_lib.TableSchema(n_dense=2, n_sparse=2)
+    buf = jnp.asarray(synth.pad_bytes(b"1\t2\t-3\tabc\tdef\n0\t\t7\tf00d\t\n"))
+    table = jnp.asarray(schema.field_is_hex())
+    kw = dict(
+        n_fields=schema.n_fields,
+        max_rows=4,
+        n_dense=schema.n_dense,
+        n_sparse=schema.n_sparse,
+    )
+
+    @jax.jit
+    def decode_with_traced_table(b, hex_t):
+        return dops.decode(b, hex_t, **kw)
+
+    got = decode_with_traced_table(buf, table)  # table is a tracer here
+    want = dops.decode(buf, table, **kw)  # concrete table, checked layout
+    for name, g, w in zip(("label", "dense", "sparse", "valid"), got, want):
+        np.testing.assert_array_equal(
+            np.asarray(g), np.asarray(w), err_msg=name
+        )
+
+
+def test_kernel_decode_layout_error_message_pinned():
+    """The permuted-layout rejection must keep naming the expected layout
+    AND the escape hatch — callers are told exactly where the hex slice
+    must sit and which decoder handles permuted schemas."""
+    schema = schema_lib.TableSchema(n_dense=2, n_sparse=2)
+    buf = jnp.asarray(synth.pad_bytes(b"1\t2\t3\tab\tcd\n"))
+    permuted = jnp.asarray(np.array([False, True, False, False, True]))
+    kw = dict(
+        n_fields=schema.n_fields,
+        max_rows=4,
+        n_dense=schema.n_dense,
+        n_sparse=schema.n_sparse,
+    )
+    with pytest.raises(ValueError) as ei:
+        dops.decode(buf, permuted, **kw)
+    msg = str(ei.value)
+    assert "decimal-then-hex" in msg
+    assert "hex fields exactly at [3, 5)" in msg
+    assert "use the ref decoder" in msg
+    assert "[1, 4]" in msg  # the offending hex-column positions
+
+
 def test_decode_overflow_wraps_like_serial():
     """8-hex-digit hashes overflow int32; wrap must match the register."""
     schema = schema_lib.TableSchema(n_dense=0, n_sparse=1)

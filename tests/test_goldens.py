@@ -13,6 +13,7 @@ floats use rtol 1e-6 so the golden stays portable across XLA backends.
 
 import hashlib
 import os
+import time
 
 import numpy as np
 import pytest
@@ -136,4 +137,134 @@ def test_golden_sharded_8_devices():
     """The 8-shard engine (fused loop ② inside shard_map) reproduces the
     golden digest bit-for-bit."""
     code = _SHARDED_GOLDEN.format(golden_path=GOLDEN)
+    assert "OK" in run_with_devices(code, n_devices=8)
+
+
+# --------------------------------------------------------------------- #
+# bytes-in fused decode: the same discipline for the decode fusion —
+# tests/goldens/decode_fused_small.npz (gen_decode_golden.py) pins the
+# unfused-reference table; every bytes-in route must reproduce it.
+# --------------------------------------------------------------------- #
+
+DECODE_GOLDEN = os.path.join(
+    os.path.dirname(__file__), "goldens", "decode_fused_small.npz"
+)
+
+
+@pytest.fixture(scope="module")
+def decode_golden():
+    g = np.load(DECODE_GOLDEN)
+    return {k: g[k] for k in g.files}
+
+
+def _decode_config(golden, **overrides) -> P.PipelineConfig:
+    kw = dict(use_fused_kernel=True, use_fused_vocab=True, use_fused_decode=True)
+    kw.update(overrides)
+    return _pipeline_config(golden, **kw)
+
+
+@pytest.mark.parametrize("fused_decode", [True, False], ids=["bytes", "decoded"])
+def test_golden_decode_single_device(decode_golden, fused_decode):
+    """Single-device engine, bytes-in dispatches on both loops (and the
+    decoded-input fused path as a control) — both must emit the golden."""
+    pipe = P.PiperPipeline(
+        _decode_config(decode_golden, use_fused_decode=fused_decode)
+    )
+    assert pipe._bytes_vocab == fused_decode and pipe._bytes_xform == fused_decode
+    outs = list(
+        pipe.run_stream(
+            lambda: synth.chunk_stream(
+                decode_golden["buf"], int(decode_golden["chunk_bytes"])
+            )
+        )
+    )
+    v = [np.asarray(o.valid) for o in outs]
+    _assert_matches_golden(
+        decode_golden,
+        np.concatenate([np.asarray(o.label)[m] for o, m in zip(outs, v)]),
+        np.concatenate([np.asarray(o.dense)[m] for o, m in zip(outs, v)]),
+        np.concatenate([np.asarray(o.sparse)[m] for o, m in zip(outs, v)]),
+    )
+
+
+def test_golden_decode_stream_absorb(decode_golden):
+    """The online-absorb route: the service ingests the dataset row-slice
+    by row-slice through the bytes-in loop-① dispatch (sequential default
+    offsets), then serves the golden table through the bytes-in loop-②
+    buckets — digest bit-for-bit."""
+    from repro.stream import StreamingPreprocessService
+
+    cfg = _decode_config(decode_golden)
+    rows = int(decode_golden["rows"])
+    sizes = [7, 1, 30, 13] + [rows - 51]
+    payloads = list(
+        synth.request_payloads(decode_golden["buf"], None, sizes, "utf8")
+    )
+    # absorb in smaller row slices — one absorb payload must fit the
+    # chunk geometry (chunk_bytes), unlike submit payloads
+    absorb_sizes = [8] * (rows // 8)
+    absorb_payloads = list(
+        synth.request_payloads(decode_golden["buf"], None, absorb_sizes, "utf8")
+    )
+    empty = P.PiperPipeline(cfg).init_state()
+    svc = StreamingPreprocessService(
+        cfg, empty, bucket_rows=(32, 128), queue_depth=8
+    ).start()
+    try:
+        for p in absorb_payloads:  # loop ① online, in row order
+            svc.absorb(p)
+        deadline = time.time() + 60
+        while int(np.asarray(svc.vocab_state.rows_seen)) < rows:
+            assert time.time() < deadline, "absorb deltas never applied"
+            time.sleep(0.005)
+        handles = [svc.submit(p) for p in payloads]
+        svc.drain(timeout=120)
+        results = [h.result(timeout=5) for h in handles]
+    finally:
+        svc.stop()
+    _assert_matches_golden(
+        decode_golden,
+        np.concatenate([r["label"] for r in results]),
+        np.concatenate([r["dense"] for r in results]),
+        np.concatenate([r["sparse"] for r in results]),
+    )
+
+
+_SHARDED_DECODE_GOLDEN = """
+import hashlib, numpy as np, jax.numpy as jnp
+from repro.data import synth, loader
+from repro.core import pipeline as P, sharded_pipeline as SP
+from repro.launch.mesh import make_data_mesh
+from repro.distributed.sharding import put_shard_feed
+
+g = np.load({golden_path!r})
+cb = int(g["chunk_bytes"])
+pc = P.PipelineConfig(chunk_bytes=cb, max_rows_per_chunk=int(g["max_rows_per_chunk"]),
+                      use_fused_kernel=True, use_fused_vocab=True,
+                      use_fused_decode=True)
+mesh = make_data_mesh(8)
+feed = loader.TabularChunkFeed(g["buf"], cb, 8)
+stacks, offsets = feed.shard_stacks()
+eng = SP.ShardedPiperPipeline(pc, mesh)
+assert eng._pipe._bytes_vocab and eng._pipe._bytes_xform
+cs, os_ = put_shard_feed(jnp.asarray(stacks), jnp.asarray(offsets), mesh)
+out = SP.flatten_sharded(eng.run_scan(cs, os_))
+v = np.asarray(out.valid)
+label = np.asarray(out.label)[v]; sparse = np.asarray(out.sparse)[v]
+np.testing.assert_array_equal(label, g["label"])
+np.testing.assert_array_equal(sparse, g["sparse"])
+np.testing.assert_allclose(np.asarray(out.dense)[v], g["dense"], rtol=1e-6)
+h = hashlib.sha256()
+h.update(np.ascontiguousarray(label, np.int32).tobytes())
+h.update(np.ascontiguousarray(sparse, np.int32).tobytes())
+assert h.hexdigest() == str(g["digest"]), "digest drift"
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_golden_decode_sharded_8_devices():
+    """The 8-shard engine with bytes-in dispatches inside shard_map
+    reproduces the golden digest bit-for-bit."""
+    code = _SHARDED_DECODE_GOLDEN.format(golden_path=DECODE_GOLDEN)
     assert "OK" in run_with_devices(code, n_devices=8)
