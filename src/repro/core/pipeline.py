@@ -104,12 +104,17 @@ class PipelineConfig:
     # over the wire layout (the compiler records admissibility as
     # `CompiledPlan.decode_*_dispatch`); per-chunk the wrappers still
     # tier-route against the shared 8 MiB VMEM residency budget and
-    # fall back to decode + the decoded-input chains beyond it. Same
-    # auto semantics as the other fused hints: None resolves via
-    # `kernels.resolve_fused()` (on iff Pallas *compiles*, i.e. TPU
-    # backend; CPU interpret mode is opt-in via True, which is what the
-    # differential tests do). Outputs are bit-identical on sparse
-    # ids/labels/state and identical-formula on dense either way.
+    # fall back to decode + the decoded-input chains beyond it. Unlike
+    # the other fused hints, None currently resolves to **off on every
+    # backend**: CI is CPU-only, so the compiled Mosaic lowering of the
+    # bytes-in kernels (SMEM limits operand, per-byte dynamic RMW /
+    # stores) has never run on real TPU hardware — auto-enabling there
+    # would make an unexercised code path the default. Opt in with True
+    # (what the differential tests and CPU interpret-mode runs do); once
+    # tests/test_decode_fuzz.py is green on a TPU, flip the resolver to
+    # `kernels.resolve_fused()` to match the other hints. Outputs are
+    # bit-identical on sparse ids/labels/state and identical-formula on
+    # dense either way.
     use_fused_decode: bool | None = None
     # The declarative per-column preprocessing program (core/plan.py).
     # None = `plan.criteo_default(schema)` — the paper's exact chain, so
@@ -145,13 +150,13 @@ class PipelineConfig:
 
     @property
     def fused_decode_enabled(self) -> bool:
-        """The resolved ``use_fused_decode`` hint (None → on iff the
-        Pallas toolchain imports and it compiles on this backend —
-        ``kernels.resolve_fused``). Only consulted for utf8 feeds."""
+        """The resolved ``use_fused_decode`` hint. None → **off**: the
+        bytes-in kernels' compiled Mosaic lowering is not yet validated
+        on real TPU hardware (CI runs interpret-mode only), so the
+        fused-decode path stays opt-in until it is — see the field
+        comment. Only consulted for utf8 feeds."""
         if self.use_fused_decode is None:
-            from repro import kernels as kernels_lib
-
-            return kernels_lib.resolve_fused()
+            return False
         return self.use_fused_decode
 
     def resolved_plan(self) -> plan_lib.PreprocPlan:

@@ -667,16 +667,19 @@ def compile_plan(
     (same ``None`` resolution); ``fused_decode`` is the matching
     ``PipelineConfig.use_fused_decode`` hint for the bytes-in whole-
     pipeline dispatches (utf8 feeds only — the engines consult the
-    routing, the compiler just records admissibility); ``use_kernels``
-    routes the unfused per-op stages through their Pallas kernels.
+    routing, the compiler just records admissibility; ``None`` resolves
+    to **off** until the compiled lowering is TPU-validated, mirroring
+    ``PipelineConfig.fused_decode_enabled``); ``use_kernels`` routes
+    the unfused per-op stages through their Pallas kernels.
     """
-    if fused is None or fused_vocab is None or fused_decode is None:
+    if fused is None or fused_vocab is None:
         from repro import kernels as kernels_lib
 
         resolved = kernels_lib.resolve_fused()
         fused = resolved if fused is None else fused
         fused_vocab = resolved if fused_vocab is None else fused_vocab
-        fused_decode = resolved if fused_decode is None else fused_decode
+    if fused_decode is None:
+        fused_decode = False
     return CompiledPlan(
         plan,
         schema,

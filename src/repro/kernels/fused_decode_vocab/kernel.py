@@ -38,10 +38,11 @@ Like every kernel package here, ``interpret=True`` on CPU (tier-1 CI
 exercises the logic without accelerator hardware) and compiled Mosaic on
 a TPU backend (ops.py switches per backend). The CI container is
 CPU-only, so the compiled lowering — in particular the SMEM limits
-operand and the per-byte dynamic RMW — is **not** exercised by CI; on
-first TPU bring-up run ``tests/test_decode_fuzz.py`` there before
-trusting the auto-enabled default, and set
-``PipelineConfig.use_fused_decode=False`` to opt out.
+operand and the per-byte dynamic RMW — is **not** exercised by CI; for
+that reason ``PipelineConfig.use_fused_decode=None`` resolves to *off*
+on every backend and this path is opt-in via ``True``. On first TPU
+bring-up run ``tests/test_decode_fuzz.py`` there, then flip the
+resolver to auto (see the ``PipelineConfig`` field comment).
 """
 
 from __future__ import annotations

@@ -36,9 +36,11 @@ decode + the tier-routed ``fused_xform`` chain.
 ``interpret=True`` on CPU (the repo-wide CI convention), compiled Mosaic
 on TPU (ops.py switches). The CI container is CPU-only, so the compiled
 lowering — in particular the per-byte dynamic VMEM loads/stores — is
-**not** exercised by CI; on first TPU bring-up run
-``tests/test_decode_fuzz.py`` there before trusting the auto-enabled
-default, and set ``PipelineConfig.use_fused_decode=False`` to opt out.
+**not** exercised by CI; for that reason
+``PipelineConfig.use_fused_decode=None`` resolves to *off* on every
+backend and this path is opt-in via ``True``. On first TPU bring-up run
+``tests/test_decode_fuzz.py`` there, then flip the resolver to auto
+(see the ``PipelineConfig`` field comment).
 """
 
 from __future__ import annotations

@@ -441,11 +441,19 @@ class StreamingPreprocessService:
             self._cond.notify_all()
 
     def _apply_pending_vocab(self) -> None:
+        # The pop AND the merge into _state must share one critical
+        # section: a concurrent absorb(row_offset=None) computes its
+        # offset as _state.rows_seen + _pending_delta.rows_seen, and in
+        # the window between a popped delta and its merge that delta
+        # would be counted by neither — undercounting the offset and
+        # breaking the offline row-order guarantee. finalize + the
+        # scheduler swap stay outside: only this thread writes _state.
         with self._vocab_lock:
             delta, self._pending_delta = self._pending_delta, None
-        if delta is not None:
-            self._state = vocab_lib.merge(self._state, delta)
-            self.scheduler.swap_vocabulary(vocab_lib.finalize(self._state))
+            if delta is None:
+                return
+            self._state = merged = vocab_lib.merge(self._state, delta)
+        self.scheduler.swap_vocabulary(vocab_lib.finalize(merged))
 
     def _gather(self, block: bool) -> list:
         """Coalesce queued requests FIFO up to the largest bucket.

@@ -186,3 +186,27 @@ def test_decode_roundtrip_property(rows, seed, n_dense, n_sparse):
     np.testing.assert_array_equal(np.asarray(batch.label)[:rows], table["label"])
     np.testing.assert_array_equal(np.asarray(batch.dense)[:rows], table["dense"])
     np.testing.assert_array_equal(np.asarray(batch.sparse)[:rows], table["sparse"])
+
+
+def test_fused_decode_knob_resolves_off_until_tpu_validated():
+    """use_fused_decode=None resolves to OFF on every backend — unlike
+    the other fused hints' resolve_fused() auto — because the bytes-in
+    kernels' compiled Mosaic lowering has not run on real TPU hardware
+    yet (CI is CPU interpret-mode only). Explicit values pass through,
+    in the config resolver and the plan compiler alike. Flip this test
+    together with the resolver once TPU bring-up validates the path."""
+    import dataclasses
+
+    from repro.core import pipeline as pipeline_lib
+    from repro.core import plan as plan_lib, plan_compiler
+
+    cfg = pipeline_lib.PipelineConfig()
+    assert cfg.use_fused_decode is None
+    assert cfg.fused_decode_enabled is False
+    assert pipeline_lib.PipelineConfig(use_fused_decode=True).fused_decode_enabled is True
+    derived = dataclasses.replace(cfg, use_fused_decode=True, max_rows_per_chunk=64)
+    assert derived.fused_decode_enabled is True
+
+    plan = plan_lib.criteo_default(schema_lib.CRITEO)
+    assert not plan_compiler.compile_plan(plan, schema_lib.CRITEO).fused_decode
+    assert plan_compiler.compile_plan(plan, schema_lib.CRITEO, fused_decode=True).fused_decode
