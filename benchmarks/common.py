@@ -10,6 +10,8 @@ trajectory is tracked, not just printed.
 
 from __future__ import annotations
 
+import datetime
+import subprocess
 import time
 from typing import Callable
 
@@ -19,6 +21,36 @@ import jax
 # derived "k=v;k=v" strings are split into typed fields. Drivers slice
 # this ledger per section and serialize it (see benchmarks/run.py).
 RECORDS: list[dict] = []
+
+
+def provenance() -> dict:
+    """Shared ``BENCH_*.json`` header: what produced these numbers.
+
+    A benchmark figure without its commit/backend is unanchorable when
+    diffing the perf trajectory across commits — every JSON writer embeds
+    this under a ``"provenance"`` key. Best-effort: fields degrade to
+    ``"unknown"`` rather than failing the benchmark."""
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True,
+            text=True,
+            timeout=5,
+        ).stdout.strip() or "unknown"
+    except Exception:  # noqa: BLE001 — no git / not a checkout
+        sha = "unknown"
+    try:
+        backend = jax.default_backend()
+        n_dev = jax.device_count()
+    except Exception:  # noqa: BLE001
+        backend, n_dev = "unknown", 0
+    return {
+        "git_sha": sha,
+        "jax_version": jax.__version__,
+        "backend": backend,
+        "device_count": n_dev,
+        "timestamp": datetime.datetime.now(datetime.timezone.utc).isoformat(),
+    }
 
 
 def _parse_derived(derived: str) -> dict | str:

@@ -177,7 +177,11 @@ if __name__ == "__main__":
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump(
-                {"sections": {"vocab": _common.RECORDS[mark:]}, "failures": []},
+                {
+                    "provenance": _common.provenance(),
+                    "sections": {"vocab": _common.RECORDS[mark:]},
+                    "failures": [],
+                },
                 f,
                 indent=2,
             )

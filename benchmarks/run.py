@@ -9,6 +9,11 @@ roofline section reads the dry-run artifacts when present (run ``python
 
     PYTHONPATH=src python -m benchmarks.run [--only fig8,table3,...]
                                            [--json-out BENCH_plan.json]
+                                           [--trace trace.json]
+
+``--trace`` additionally exports a Perfetto/chrome://tracing trace of
+the whole run (with stage spans enabled, so utf8 chunks show nested
+decode spans) plus a registry metrics snapshot next to it.
 """
 
 from __future__ import annotations
@@ -70,7 +75,20 @@ def main() -> None:
         default="BENCH_plan.json",
         help="machine-readable dump path ('' disables)",
     )
+    ap.add_argument(
+        "--trace",
+        default=None,
+        metavar="OUT.json",
+        help="export a Perfetto/chrome://tracing trace of the run, plus a "
+        "metrics snapshot next to it (OUT.metrics.json)",
+    )
     args = ap.parse_args()
+
+    if args.trace:
+        from repro import obs
+
+        obs.enable()
+        obs.set_stage_spans(True)  # nested decode spans need split dispatch
     names = (
         args.only.split(",")
         if args.only
@@ -108,9 +126,23 @@ def main() -> None:
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump(
-                {"sections": sections, "failures": failures}, f, indent=2
+                {
+                    "provenance": common.provenance(),
+                    "sections": sections,
+                    "failures": failures,
+                },
+                f,
+                indent=2,
             )
         print(f"# wrote {args.json_out} ({sum(map(len, sections.values()))} rows)")
+
+    if args.trace:
+        from repro import obs
+
+        obs.tracer().export(args.trace)
+        mpath = args.trace.replace(".json", "") + ".metrics.json"
+        obs.metrics().export_jsonl(mpath, extra={"provenance": common.provenance()})
+        print(f"# wrote {args.trace} + {mpath}")
 
     if failures:
         sys.exit(1)

@@ -7,16 +7,25 @@ bounded ingress and drained. Reports throughput plus p50/p95/p99
 request latency — the latency-bound metrics the offline benchmarks
 don't measure.
 
-Output: the usual ``name,us_per_call,derived`` CSV rows plus one
-machine-readable JSON line per format:
+Output: the usual ``name,us_per_call,derived`` CSV rows plus two
+machine-readable JSON lines per format:
 
-    stream_json/{fmt} {"requests": ..., "rows_per_s": ..., "p50_ms": ...}
+    stream_json/{fmt}  {"requests": ..., "rows_per_s": ..., "p50_ms": ...}
+    stream_stall/{fmt} {"buckets_s": {...}, "wall_s": ..., "fractions": ...}
+
+With ``--trace out.json`` the run also exports a Perfetto/
+chrome://tracing trace of the whole sweep (stage spans enabled, so utf8
+chunks show nested decode → vocab/transform spans) plus a metrics
+snapshot at ``out.metrics.json`` (per-format registry dump + stall
+report + provenance).
 
     PYTHONPATH=src python benchmarks/stream_service.py [--rows N]
+                                                       [--trace out.json]
 """
 
 from __future__ import annotations
 
+import json
 import os
 import sys
 
@@ -27,7 +36,9 @@ if __package__ in (None, ""):  # direct script invocation
 
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import emit
+from repro import obs
 from repro.core import pipeline as pipeline_lib
 from repro.data import loader, synth
 from repro.stream import StreamingPreprocessService
@@ -49,7 +60,7 @@ def _request_sizes(rng: np.random.Generator, total_rows: int) -> list[int]:
     return sizes
 
 
-def run_format(fmt: str, rows: int) -> None:
+def run_format(fmt: str, rows: int) -> dict:
     cfg = synth.SynthConfig(rows=rows, seed=0)
     buf, table = synth.make_dataset(cfg)
     pc = pipeline_lib.PipelineConfig(schema=cfg.schema, input_format=fmt)
@@ -87,7 +98,10 @@ def run_format(fmt: str, rows: int) -> None:
         snap = svc.metrics.snapshot()
         compiled = svc.compile_cache_size()
     finally:
+        # stop() joins the loop, whose exit charges the tail segment —
+        # read the stall report only after, so Σ buckets == full wall
         svc.stop()
+    stall = svc.stall_report()
 
     # one "call" = one request: the us_per_call column carries the mean
     # request latency, keeping the cross-section CSV contract comparable
@@ -99,11 +113,28 @@ def run_format(fmt: str, rows: int) -> None:
         f"requests={snap['requests']};wall_s={snap['wall_s']};compiled={compiled}",
     )
     print(f"stream_json/{fmt} {svc.metrics.to_json()}")
+    print(f"stream_stall/{fmt} {json.dumps(stall, sort_keys=True)}")
+    return {"metrics": svc.registry.snapshot(), "stall": stall}
 
 
-def main(rows: int = ROWS) -> None:
+def main(rows: int = ROWS, trace: str | None = None) -> None:
+    if trace:
+        obs.enable()
+        obs.set_stage_spans(True)  # nested decode spans need split dispatch
+    per_fmt = {}
     for fmt in ("utf8", "binary"):
-        run_format(fmt, rows)
+        per_fmt[fmt] = run_format(fmt, rows)
+    if trace:
+        obs.tracer().export(trace)
+        mpath = trace.replace(".json", "") + ".metrics.json"
+        with open(mpath, "w") as f:
+            json.dump(
+                {"provenance": common.provenance(), "formats": per_fmt},
+                f,
+                indent=2,
+                sort_keys=True,
+            )
+        print(f"# wrote {trace} + {mpath}")
 
 
 if __name__ == "__main__":
@@ -111,5 +142,11 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--rows", type=int, default=ROWS)
+    ap.add_argument(
+        "--trace",
+        default=None,
+        metavar="OUT.json",
+        help="export a Perfetto trace + metrics snapshot of the sweep",
+    )
     args = ap.parse_args()
-    main(rows=args.rows)
+    main(rows=args.rows, trace=args.trace)

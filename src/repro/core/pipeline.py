@@ -52,7 +52,9 @@ from typing import Iterable, Iterator
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro import obs
 from repro.core import plan as plan_lib
 from repro.core import plan_compiler
 from repro.core import schema as schema_lib
@@ -197,12 +199,84 @@ class PiperPipeline:
         # stream pass would retrace/recompile on every epoch
         self._jit_vocab_step = jax.jit(self.vocab_step)
         self._jit_transform_chunk = jax.jit(self.transform_chunk)
+        # Stage-split entry points for fine-grained tracing
+        # (obs.stage_spans()): decode as its own dispatch, then the
+        # compiled plan's post-decode half on the decoded batch. The
+        # split boundary is all-integer tensors, so outputs are
+        # bit-identical to the monolithic dispatch (tests/test_obs.py);
+        # jit is lazy — nothing compiles unless the mode is on.
+        self._jit_decode_chunk = jax.jit(self.decode_chunk)
+        self._jit_vocab_batch = jax.jit(self.compiled.vocab_step)
+        self._jit_transform_batch = jax.jit(self.compiled.transform)
+        # Span labels: the compiled plan's tier + route metadata, stamped
+        # on every per-chunk span so the trace says *which* code path
+        # (fused/vmem, fused/hbm, unfused, bytes/...) the time went to.
+        self._vocab_span_labels = {
+            "engine": "piper",
+            "route": (
+                self.compiled.decode_vocab_route
+                if self._bytes_vocab
+                else self.compiled.vocab_route
+            ),
+            "tier": self.compiled.vocab_tier,
+        }
+        self._xform_span_labels = {
+            "engine": "piper",
+            "route": (
+                self.compiled.decode_xform_route(config.max_rows_per_chunk)
+                if self._bytes_xform
+                else self.compiled.xform_route
+            ),
+            "tier": self.compiled.tier,
+        }
+        # Process-wide rows/bytes counters (per loop). utf8 rows are
+        # counted from newline frames when the chunk is host-resident;
+        # byte counts include the chunk padding the engine processed.
+        m = obs.metrics()
+        self._c_chunks = {
+            "loop1": m.counter("pipeline.loop1_chunks_total"),
+            "loop2": m.counter("pipeline.loop2_chunks_total"),
+        }
+        self._c_rows = {
+            "loop1": m.counter("pipeline.loop1_rows_total"),
+            "loop2": m.counter("pipeline.loop2_rows_total"),
+        }
+        self._c_bytes = {
+            "loop1": m.counter("pipeline.loop1_bytes_total"),
+            "loop2": m.counter("pipeline.loop2_bytes_total"),
+        }
+
+    def _note_chunk(self, loop: str, chunk) -> None:
+        """Count one processed chunk (host-side, no device sync: jax
+        arrays only contribute their static byte size)."""
+        self._c_chunks[loop].add(1)
+        if self.config.input_format == "utf8":
+            self._c_bytes[loop].add(int(np.size(chunk)))
+            if isinstance(chunk, np.ndarray):
+                self._c_rows[loop].add(int((chunk == schema_lib.NEWLINE).sum()))
+        else:
+            self._c_rows[loop].add(int(chunk["label"].shape[0]))
+
+    def _stage_split(self, bytes_routed: bool) -> bool:
+        """Whether per-chunk work should run as decode + post-decode
+        dispatches for real nested decode spans (trace-collection mode;
+        a bytes-routed loop keeps its single fused dispatch — that
+        fusion is the whole point, the span just carries the route)."""
+        return (
+            obs.stage_spans()
+            and self.config.input_format == "utf8"
+            and not bytes_routed
+        )
 
     # ------------------------------------------------------------------ #
     # Decode stage
     # ------------------------------------------------------------------ #
     def decode_chunk(self, chunk: jnp.ndarray) -> schema_lib.TabularBatch:
         """Decode one padded UTF-8 chunk (whole rows) into a TabularBatch."""
+        with jax.named_scope("piper.decode"):
+            return self._decode_chunk(chunk)
+
+    def _decode_chunk(self, chunk: jnp.ndarray) -> schema_lib.TabularBatch:
         if self.config.use_kernels:
             from repro.kernels.decode_utf8 import ops as decode_ops
 
@@ -252,15 +326,16 @@ class PiperPipeline:
     def vocab_step(
         self, state: vocab_lib.VocabState, chunk
     ) -> vocab_lib.VocabState:
-        if self._bytes_vocab:
-            # bytes-in loop ①: the raw chunk IS the kernel input — no
-            # decoded field table ever materializes (tier-routed; the
-            # wrapper falls back to decode + the decoded-input chain on
-            # the HBM tier). Bit-identical to the branch below.
-            return self.compiled.vocab_step_bytes(
-                state, chunk, max_rows=self.config.max_rows_per_chunk
-            )
-        return self.compiled.vocab_step(state, self._as_batch(chunk))
+        with jax.named_scope("piper.loop1"):
+            if self._bytes_vocab:
+                # bytes-in loop ①: the raw chunk IS the kernel input — no
+                # decoded field table ever materializes (tier-routed; the
+                # wrapper falls back to decode + the decoded-input chain on
+                # the HBM tier). Bit-identical to the branch below.
+                return self.compiled.vocab_step_bytes(
+                    state, chunk, max_rows=self.config.max_rows_per_chunk
+                )
+            return self.compiled.vocab_step(state, self._as_batch(chunk))
 
     def build_state_stream(self, chunks: Iterable) -> vocab_lib.VocabState:
         """Loop ① over a host iterator, stopping *before* finalization.
@@ -271,8 +346,20 @@ class PiperPipeline:
         re-finalize between serving steps.
         """
         state = self.init_state()
+        split = self._stage_split(self._bytes_vocab)
         for chunk in chunks:
-            state = self._jit_vocab_step(state, jax.tree.map(jnp.asarray, chunk))
+            self._note_chunk("loop1", chunk)
+            chunk = jax.tree.map(jnp.asarray, chunk)
+            with obs.span("loop1/chunk", **self._vocab_span_labels):
+                if split:
+                    with obs.span("decode"):
+                        batch = self._jit_decode_chunk(chunk)
+                    with obs.span(
+                        "vocab_update", route=self.compiled.vocab_route
+                    ):
+                        state = self._jit_vocab_batch(state, batch)
+                else:
+                    state = self._jit_vocab_step(state, chunk)
         return state
 
     def build_vocab_stream(self, chunks: Iterable) -> vocab_lib.Vocabulary:
@@ -289,7 +376,10 @@ class PiperPipeline:
 
     def build_vocab_scan(self, stacked_chunks) -> vocab_lib.Vocabulary:
         """Loop ① fully on device: chunks stacked on a leading axis."""
-        return vocab_lib.finalize(self._build_vocab_scan(stacked_chunks))
+        with obs.span("loop1/scan", **self._vocab_span_labels):
+            state = self._build_vocab_scan(stacked_chunks)
+        with obs.span("vocab/finalize"):
+            return vocab_lib.finalize(state)
 
     # ------------------------------------------------------------------ #
     # Loop ② — ApplyVocab + dense transforms
@@ -297,14 +387,15 @@ class PiperPipeline:
     def transform_chunk(
         self, vocabulary: vocab_lib.Vocabulary, chunk
     ) -> schema_lib.ProcessedBatch:
-        if self._bytes_xform:
-            # bytes-in loop ②: raw UTF-8 straight to the final features in
-            # one dispatch (tier-routed; HBM tier falls back to decode +
-            # the decoded-input chain). Bit-identical to the branch below.
-            return self.compiled.transform_bytes(
-                vocabulary, chunk, max_rows=self.config.max_rows_per_chunk
-            )
-        return self.compiled.transform(vocabulary, self._as_batch(chunk))
+        with jax.named_scope("piper.loop2"):
+            if self._bytes_xform:
+                # bytes-in loop ②: raw UTF-8 straight to the final features in
+                # one dispatch (tier-routed; HBM tier falls back to decode +
+                # the decoded-input chain). Bit-identical to the branch below.
+                return self.compiled.transform_bytes(
+                    vocabulary, chunk, max_rows=self.config.max_rows_per_chunk
+                )
+            return self.compiled.transform(vocabulary, self._as_batch(chunk))
 
     def frozen_transform(
         self, vocabulary: vocab_lib.Vocabulary
@@ -344,7 +435,8 @@ class PiperPipeline:
 
     def run_scan(self, stacked_chunks) -> schema_lib.ProcessedBatch:
         vocabulary = self.build_vocab_scan(stacked_chunks)
-        return self.transform_scan(vocabulary, stacked_chunks)
+        with obs.span("loop2/scan", **self._xform_span_labels):
+            return self.transform_scan(vocabulary, stacked_chunks)
 
 
 class FrozenVocabTransform:
@@ -400,13 +492,30 @@ class FrozenVocabTransform:
         self._vocab = vocabulary
 
     def __call__(self, chunk) -> schema_lib.ProcessedBatch:
-        return self._jit(self._vocab, jax.tree.map(jnp.asarray, chunk))
+        pipe = self._pipe
+        pipe._note_chunk("loop2", chunk)
+        chunk = jax.tree.map(jnp.asarray, chunk)
+        with obs.span("loop2/chunk", **pipe._xform_span_labels):
+            if pipe._stage_split(pipe._bytes_xform):
+                # trace-collection mode: decode as its own dispatch so
+                # the span nests a *real* decode segment (bit-identical —
+                # the split boundary is integer tensors)
+                with obs.span("decode"):
+                    batch = pipe._jit_decode_chunk(chunk)
+                with obs.span("transform", route=pipe.compiled.xform_route):
+                    return pipe._jit_transform_batch(self._vocab, batch)
+            return self._jit(self._vocab, chunk)
 
     def compile_cache_size(self) -> int:
         """Number of compiled executables behind this step (jit cache
-        entries). The scheduler's shape discipline pins this: after
-        warmup it must stop growing (tests/test_stream_service.py)."""
-        return self._jit._cache_size()
+        entries, stage-split entry points included). The scheduler's
+        shape discipline pins this: after warmup it must stop growing
+        (tests/test_stream_service.py)."""
+        return (
+            self._jit._cache_size()
+            + self._pipe._jit_decode_chunk._cache_size()
+            + self._pipe._jit_transform_batch._cache_size()
+        )
 
 
 def flatten_processed(

@@ -403,6 +403,15 @@ class CompiledPlan:
         return "unfused"
 
     @property
+    def xform_route(self) -> str:
+        """Where the compiler sent the canonical loop-② half:
+        ``"fused/vmem"``, ``"fused/hbm"``, or ``"unfused"`` — the label
+        the obs spans tag loop-② dispatches with."""
+        if self._fused_dispatch:
+            return f"fused/{self.tier}"
+        return "unfused"
+
+    @property
     def decode_vocab_route(self) -> str:
         """Where a utf8 engine's loop ① enters: ``"bytes/vmem"`` (the
         bytes-in kernel), ``"bytes/hbm"`` (bytes-in requested but the
@@ -432,7 +441,7 @@ class CompiledPlan:
             f"CompiledPlan: {self.n_dense_out} dense + {self.n_sparse_out} "
             f"sparse out, {self.n_vocab_columns} vocab columns @ range "
             f"{self.vocab_range}, fused={self.fused} "
-            f"(dispatch={'fused/' + self.tier if self._fused_dispatch else 'unfused'})"
+            f"(dispatch={self.xform_route})"
         )
         vocab_half = (
             f"[vocab ×{self.n_vocab_columns} → {self.vocab_route}] "

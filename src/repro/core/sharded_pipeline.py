@@ -38,6 +38,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import obs
 from repro.core import pipeline as pipeline_lib
 from repro.core import schema as schema_lib
 from repro.core import vocab as vocab_lib
@@ -144,6 +145,9 @@ class ShardedPiperPipeline:
             chunks_local = jax.tree.map(lambda x: x[0], chunks_blk)
             offs = offsets_blk[0]
 
+            # device-profile label: each shard's private loop-① scan shows
+            # up named on the XLA timeline next to the host spans
+            @jax.named_scope("piper.shard_loop1")
             def body(carry, xs):
                 first_pos, n_valid = carry
                 chunk, off = xs
@@ -183,8 +187,17 @@ class ShardedPiperPipeline:
         ``vocab.merge`` and the service re-finalizes between steps.
         """
         self._check_feed(chunks)
-        states = self._jit_shard_states(chunks, offsets)
-        return vocab_lib.merge_tree(states)
+        with obs.span(
+            "loop1/shards",
+            engine="sharded",
+            shards=self.n_shards,
+            route=self.compiled.vocab_route,
+            tier=self.compiled.vocab_tier,
+        ):
+            states = self._jit_shard_states(chunks, offsets)
+        # the epoch's one synchronization point: log-depth monoid reduce
+        with obs.span("vocab/merge_tree", engine="sharded", shards=self.n_shards):
+            return vocab_lib.merge_tree(states)
 
     def build_vocab_scan(self, chunks, offsets) -> vocab_lib.Vocabulary:
         """Loop ① end-to-end: local accumulation → merge tree → finalize.
@@ -211,6 +224,7 @@ class ShardedPiperPipeline:
         def local(vocab_rep, chunks_blk):
             chunks_local = jax.tree.map(lambda x: x[0], chunks_blk)
 
+            @jax.named_scope("piper.shard_loop2")
             def body(carry, chunk):
                 del carry
                 return (), self._pipe.transform_chunk(vocab_rep, chunk)
@@ -251,7 +265,14 @@ class ShardedPiperPipeline:
         vocabulary = jax.device_put(
             vocabulary, sharding_lib.replicated(self.mesh)
         )
-        return self._jit_transform(vocabulary, chunks)
+        with obs.span(
+            "loop2/shards",
+            engine="sharded",
+            shards=self.n_shards,
+            route=self.compiled.xform_route,
+            tier=self.compiled.tier,
+        ):
+            return self._jit_transform(vocabulary, chunks)
 
     # -------------------------------------------------------------- #
     # end-to-end

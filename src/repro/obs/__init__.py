@@ -1,0 +1,111 @@
+"""repro.obs — pipeline-wide observability: spans, metrics, stall attribution.
+
+Zero-dependency (stdlib + numpy) instrumentation substrate shared by all
+three engines (``PiperPipeline``, ``ShardedPiperPipeline``, the
+``repro.stream`` service):
+
+  * :mod:`repro.obs.trace`    — thread-safe nested span tracer exported
+    as Chrome/Perfetto trace-event JSON, bridged into
+    ``jax.profiler.TraceAnnotation`` so host spans line up with device
+    profiles;
+  * :mod:`repro.obs.counters` — counter/gauge/histogram registry with a
+    ``snapshot()``/JSONL export contract (histograms carry exact
+    count/sum plus a bounded percentile reservoir);
+  * :mod:`repro.obs.stall`    — exhaustive wall-time attribution
+    (queue-wait / host-assembly / device-dispatch / vocab-merge), the
+    signal the multi-host autoscaler and e2e-overlap work read.
+
+Default-on and provably non-semantic: instrumentation never touches the
+computation (spans time host blocks; ``jax.named_scope`` only names
+HLO), every golden/bit-identity test runs with it enabled, and
+:func:`disable` reduces a span to a shared no-op context manager.
+
+``stage_spans`` (off by default) is the one knob that changes execution
+*structure* without changing results: the utf8 engines split their
+single per-chunk dispatch into a decode dispatch + a post-decode
+dispatch so the trace shows real nested ``decode`` spans. The split is
+at an integer-tensor boundary, so outputs stay bit-identical
+(tests/test_obs.py pins this); it costs one extra dispatch per chunk,
+which is why only trace-collection runs (``--trace``) turn it on.
+"""
+
+from __future__ import annotations
+
+import threading
+
+from repro.obs import counters as counters_lib
+from repro.obs import stall  # noqa: F401  (re-export module)
+from repro.obs import trace as trace_lib
+from repro.obs.counters import Counter, Gauge, Histogram, Registry
+from repro.obs.stall import StallClock
+from repro.obs.trace import Tracer, validate_trace
+
+_GLOBAL_TRACER = trace_lib.Tracer()
+_STAGE_SPANS = threading.Event()
+
+
+def tracer() -> Tracer:
+    """The process-wide tracer every engine records into (one timeline)."""
+    return _GLOBAL_TRACER
+
+
+def span(name: str, cat: str = "host", **labels):
+    """Record a nested span on the global tracer (context manager)."""
+    return _GLOBAL_TRACER.span(name, cat=cat, **labels)
+
+
+def instant(name: str, cat: str = "host", **labels) -> None:
+    """Record an instant marker on the global tracer."""
+    _GLOBAL_TRACER.instant(name, cat=cat, **labels)
+
+
+def enable() -> None:
+    _GLOBAL_TRACER.enabled = True
+
+
+def disable() -> None:
+    _GLOBAL_TRACER.enabled = False
+
+
+def enabled() -> bool:
+    return _GLOBAL_TRACER.enabled
+
+
+def metrics() -> Registry:
+    """The process-wide default metrics registry (engine-level counters;
+    services own private registries — see :class:`Registry`)."""
+    return counters_lib.default_registry()
+
+
+def set_stage_spans(on: bool) -> None:
+    """Toggle fine-grained stage spans (separate decode dispatch on the
+    utf8 engines — see the module docstring). Off by default."""
+    if on:
+        _STAGE_SPANS.set()
+    else:
+        _STAGE_SPANS.clear()
+
+
+def stage_spans() -> bool:
+    return _STAGE_SPANS.is_set()
+
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "Registry",
+    "StallClock",
+    "Tracer",
+    "disable",
+    "enable",
+    "enabled",
+    "instant",
+    "metrics",
+    "set_stage_spans",
+    "span",
+    "stage_spans",
+    "stall",
+    "tracer",
+    "validate_trace",
+]

@@ -38,6 +38,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.core import pipeline as pipeline_lib
 from repro.core import schema as schema_lib
 from repro.core import vocab as vocab_lib
@@ -225,6 +226,10 @@ class MicroBatchScheduler:
         ``schema.max_row_bytes`` — guarantees any row-fitting batch also
         byte-fits; smaller values trade buffer memory for the chance that
         the byte axis, not the row axis, picks the bucket.
+      registry: the :class:`repro.obs.Registry` the packing metrics land
+        in (bucket occupancy / padding-waste histograms, the recompile
+        counter). The service passes its own; standalone schedulers get
+        a private one.
     """
 
     def __init__(
@@ -233,12 +238,30 @@ class MicroBatchScheduler:
         vocabulary: vocab_lib.Vocabulary,
         bucket_rows: tuple[int, ...] = DEFAULT_BUCKET_ROWS,
         bytes_per_row: int | None = None,
+        registry: obs.Registry | None = None,
     ):
         if not bucket_rows:
             raise ValueError("need at least one bucket capacity")
         self.config = config
         self.schema = config.schema
         self.plan = config.resolved_plan()
+        self.registry = registry if registry is not None else obs.Registry()
+        self._c_batches = self.registry.counter(
+            "stream.batches_total", "dispatched micro-batches"
+        )
+        self._h_occupancy = self.registry.histogram(
+            "stream.bucket_occupancy", "valid rows / bucket capacity per batch"
+        )
+        self._h_padding = self.registry.histogram(
+            "stream.padding_rows", "wasted (padded) rows per batch"
+        )
+        # Steady-state shape discipline, as a first-class signal: any
+        # executable compiled past warmup increments this (the
+        # no-recompile guarantee asserts it stays flat —
+        # tests/test_stream_service.py).
+        self._c_recompiles = self.registry.counter(
+            "stream.recompiles_total", "executables compiled at dispatch"
+        )
         self.bytes_per_row = (
             int(bytes_per_row) if bytes_per_row else config.schema.max_row_bytes
         )
@@ -353,6 +376,9 @@ class MicroBatchScheduler:
             row += r.n_rows
         nbytes = sum(r.n_bytes for r in requests)
         bucket = self.select_bucket(row, nbytes)
+        self._c_batches.add(1)
+        self._h_occupancy.observe(row / bucket.rows)
+        self._h_padding.observe(bucket.rows - row)
 
         if self.config.input_format == "utf8":
             chunk = np.zeros(bucket.chunk_bytes, dtype=np.uint8)
@@ -384,8 +410,18 @@ class MicroBatchScheduler:
     def dispatch(self, batch: MicroBatch) -> schema_lib.ProcessedBatch:
         """Launch the bucket's compiled transform. JAX dispatch is async:
         the call returns immediately with device futures, which is what
-        lets the service assemble batch *i+1* while *i* transforms."""
-        return batch.bucket.transform(batch.chunk)
+        lets the service assemble batch *i+1* while *i* transforms.
+
+        Any executable compiled *by this call* (jit cache growth across
+        the dispatch) increments ``stream.recompiles_total`` — warmup
+        shows ``len(buckets)`` compiles, steady state must show zero.
+        """
+        before = batch.bucket.transform.compile_cache_size()
+        out = batch.bucket.transform(batch.chunk)
+        grew = batch.bucket.transform.compile_cache_size() - before
+        if grew > 0:
+            self._c_recompiles.add(grew)
+        return out
 
     def route(self, batch: MicroBatch, out: schema_lib.ProcessedBatch) -> list[dict]:
         """Block on the device result and slice it per request (batch

@@ -50,8 +50,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import pipeline as pipeline_lib
 from repro.core import vocab as vocab_lib
+from repro.obs import stall as stall_lib
 from repro.stream import metrics as metrics_lib
 from repro.stream import scheduler as scheduler_lib
 
@@ -86,6 +88,11 @@ class StreamingPreprocessService:
         :class:`~repro.stream.scheduler.MicroBatchScheduler`).
       queue_depth: ingress bound — the backpressure knob.
       poll_s: loop idle poll interval.
+      registry: the :class:`repro.obs.Registry` every service signal
+        lands in (request metrics, stall buckets, queue gauges, packing
+        histograms, recompile counter — ONE ``registry.snapshot()`` is
+        the full service view). Default: a private registry per service,
+        so concurrent services never mix numbers.
     """
 
     def __init__(
@@ -96,14 +103,17 @@ class StreamingPreprocessService:
         bytes_per_row: int | None = None,
         queue_depth: int = 64,
         poll_s: float = 0.005,
+        registry: obs.Registry | None = None,
     ):
         self.config = config
         self._state = vocab_state
+        self.registry = registry if registry is not None else obs.Registry()
         self.scheduler = scheduler_lib.MicroBatchScheduler(
             config,
             vocab_lib.finalize(vocab_state),
             bucket_rows=bucket_rows,
             bytes_per_row=bytes_per_row,
+            registry=self.registry,
         )
         self.plan = self.scheduler.plan
         # Fail at construction, not at first dispatch: a state built with a
@@ -128,7 +138,31 @@ class StreamingPreprocessService:
         # jax.jit wrapper would duplicate the trace/compile cache
         self._ingest_step = self._ingest._jit_vocab_step
         self._absorb_lock = threading.Lock()
-        self.metrics = metrics_lib.ServiceMetrics()
+        self.metrics = metrics_lib.ServiceMetrics(self.registry)
+        # Stall attribution: the service loop laps this clock at every
+        # phase boundary, so its wall time splits exhaustively into
+        # queue-wait / host-assembly / device-dispatch / vocab-merge
+        # (see repro.obs.stall; stall_report() is the snapshot).
+        self._stall = stall_lib.StallClock(self.registry)
+        self._g_qdepth = self.registry.gauge(
+            "stream.ingress_depth", "requests queued in the bounded ingress"
+        )
+        self._h_backpressure = self.registry.histogram(
+            "stream.backpressure_wait_s", "submit-side blocking on a full ingress"
+        )
+        self._c_overlap = self.registry.counter(
+            "stream.overlap_assembly_s",
+            "host assembly+dispatch seconds hidden behind an in-flight batch",
+        )
+        self._c_refresh = self.registry.counter(
+            "stream.vocab_refresh_total", "loop-1 deltas accepted"
+        )
+        self._c_apply = self.registry.counter(
+            "stream.vocab_apply_total", "atomic vocabulary swaps applied"
+        )
+        self._c_absorb = self.registry.counter(
+            "stream.absorb_total", "payloads ingested through online loop-1"
+        )
         self._ingress: queue.Queue = queue.Queue(maxsize=queue_depth)
         self._carry: scheduler_lib.StreamRequest | None = None
         self._pending_delta: vocab_lib.VocabState | None = None
@@ -247,12 +281,17 @@ class StreamingPreprocessService:
             req.submit_t = time.perf_counter()
             self.metrics.note_submit(req.submit_t)
             try:
+                # The put blocks while the ingress is full — that IS the
+                # backpressure; its duration is the producer-side stall.
                 self._ingress.put(req, timeout=timeout)
             except queue.Full:
+                self._h_backpressure.observe(time.perf_counter() - req.submit_t)
                 with self._cond:
                     self._outstanding -= 1
                     self._cond.notify_all()  # a waiting drain() may now be done
                 raise
+            self._h_backpressure.observe(time.perf_counter() - req.submit_t)
+            self._g_qdepth.set(self._ingress.qsize())
         if self._error is not None:
             # The loop died while (or right before) we enqueued: its
             # ingress sweep may have missed this request — sweep again so
@@ -276,7 +315,7 @@ class StreamingPreprocessService:
         record into the fresh metrics."""
         for p in payloads:
             self.submit(p).result()
-        self.metrics = metrics_lib.ServiceMetrics()
+        self.metrics.reset()
 
     def drain(self, timeout: float | None = None) -> None:
         """Block until every accepted request has completed."""
@@ -304,6 +343,8 @@ class StreamingPreprocessService:
                 self._pending_delta = delta_state
             else:
                 self._pending_delta = vocab_lib.merge(self._pending_delta, delta_state)
+        self._c_refresh.add(1)
+        obs.instant("vocab/refresh", cat="vocab")
 
     def absorb(self, payload, row_offset: int | None = None) -> None:
         """Run loop ① on one payload and fold the delta into the serving
@@ -363,7 +404,9 @@ class StreamingPreprocessService:
             base = vocab_lib.VocabState(
                 first_pos=base.first_pos, rows_seen=jnp.int32(row_offset)
             )
-            st = self._ingest_step(base, jax.tree.map(jnp.asarray, chunk))
+            with obs.span("loop1/absorb", **self._ingest._vocab_span_labels):
+                st = self._ingest_step(base, jax.tree.map(jnp.asarray, chunk))
+            self._c_absorb.add(1)
             # the delta carries only ITS valid-row count: merge() sums
             # rows_seen, so the offset must not be double-counted
             delta = vocab_lib.VocabState(
@@ -381,6 +424,13 @@ class StreamingPreprocessService:
     def compile_cache_size(self) -> int:
         return self.scheduler.compile_cache_size()
 
+    def stall_report(self) -> dict:
+        """Where the service loop's wall time went: exhaustive split into
+        queue-wait / host-assembly / device-dispatch / vocab-merge seconds
+        (every loop second lands in exactly one bucket, so the buckets sum
+        to the measured wall time — see :func:`repro.obs.stall.report`)."""
+        return stall_lib.report(self.registry)
+
     # ------------------------------------------------------------------ #
     # service loop
     # ------------------------------------------------------------------ #
@@ -388,22 +438,51 @@ class StreamingPreprocessService:
         inflight: tuple | None = None  # (MicroBatch, device ProcessedBatch)
         nxt: tuple | None = None
         gathered: list = []
+        self._stall.start()
         try:
             while True:
                 self._apply_pending_vocab()
+                self._stall.lap("vocab_merge")
                 # Only wait for ingress when idle: with a batch in flight
                 # an empty queue means "complete it now", not "poll" —
                 # polling would tax sparse-traffic latency by poll_s.
-                gathered = self._gather(block=inflight is None)
+                if inflight is None:
+                    with obs.span("queue/wait", cat="queue"):
+                        gathered = self._gather(block=True)
+                else:
+                    gathered = self._gather(block=False)
+                self._g_qdepth.set(self._ingress.qsize())
+                self._stall.lap("queue_wait")
                 nxt = None
                 if gathered:
-                    batch = self.scheduler.assemble(gathered)
+                    # With a batch in flight, this step's host work runs
+                    # UNDER the device's compute — that hidden time is the
+                    # double-buffering win, attributed to overlap_assembly_s.
+                    overlapped = inflight is not None
+                    t_host = time.perf_counter()
+                    with obs.span(
+                        "stream/assemble", cat="stream", requests=len(gathered)
+                    ):
+                        batch = self.scheduler.assemble(gathered)
+                    self._stall.lap("host_assembly")
                     # async dispatch: device starts on batch i+1's upload +
                     # transform while we still hold batch i's futures
-                    nxt = (batch, self.scheduler.dispatch(batch))
+                    with obs.span(
+                        "stream/dispatch", cat="stream", bucket_rows=batch.bucket.rows
+                    ):
+                        nxt = (batch, self.scheduler.dispatch(batch))
+                    self._stall.lap("device_dispatch")
+                    if overlapped:
+                        self._c_overlap.add(time.perf_counter() - t_host)
                     gathered = []
                 if inflight is not None:
-                    self._complete(*inflight)
+                    with obs.span(
+                        "device/wait",
+                        cat="stream",
+                        bucket_rows=inflight[0].bucket.rows,
+                    ):
+                        self._complete(*inflight)
+                    self._stall.lap("device_dispatch")
                     inflight = None
                 inflight = nxt
                 nxt = None
@@ -430,6 +509,10 @@ class StreamingPreprocessService:
                 except queue.Empty:
                     break
             self._fail_requests(doomed, e)
+        finally:
+            # The tail segment (since the last lap) is idle waiting for
+            # shutdown — charge it to queue_wait so Σ buckets == wall.
+            self._stall.stop("queue_wait")
 
     def _fail_requests(self, requests, err: BaseException) -> None:
         if not requests:
@@ -452,8 +535,12 @@ class StreamingPreprocessService:
             delta, self._pending_delta = self._pending_delta, None
             if delta is None:
                 return
-            self._state = merged = vocab_lib.merge(self._state, delta)
-        self.scheduler.swap_vocabulary(vocab_lib.finalize(merged))
+            with obs.span("vocab/merge", cat="vocab"):
+                self._state = merged = vocab_lib.merge(self._state, delta)
+        with obs.span("vocab/swap", cat="vocab"):
+            self.scheduler.swap_vocabulary(vocab_lib.finalize(merged))
+        self._c_apply.add(1)
+        obs.instant("vocab/applied", cat="vocab")
 
     def _gather(self, block: bool) -> list:
         """Coalesce queued requests FIFO up to the largest bucket.

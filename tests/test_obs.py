@@ -1,0 +1,371 @@
+"""Observability layer: tracer/registry/stall units, trace schema, and
+the non-semantic guarantee — instrumentation (including stage spans)
+never changes a single output bit on any engine."""
+
+import json
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import pipeline as P
+from repro.data import synth
+from repro.obs import counters as counters_lib
+from repro.obs import stall as stall_lib
+from repro.obs import trace as trace_lib
+from repro.stream import StreamingPreprocessService
+from repro.stream import metrics as metrics_lib
+
+
+@pytest.fixture
+def instrumented():
+    """Enable tracing + stage spans for one test, restoring the global
+    toggles (and draining the global tracer ring) afterwards."""
+    was_enabled = obs.enabled()
+    was_stage = obs.stage_spans()
+    obs.enable()
+    obs.set_stage_spans(True)
+    obs.tracer().reset()
+    yield obs.tracer()
+    obs.tracer().reset()
+    obs.set_stage_spans(was_stage)
+    if not was_enabled:
+        obs.disable()
+
+
+# --------------------------------------------------------------------- #
+# counters / gauges / histograms
+# --------------------------------------------------------------------- #
+
+
+def test_counter_monotonic():
+    c = counters_lib.Counter("c")
+    c.add()
+    c.add(2.5)
+    assert c.value == 3.5
+    with pytest.raises(ValueError, match="cannot decrease"):
+        c.add(-1)
+    c.reset()
+    assert c.value == 0
+
+
+def test_gauge_last_write_wins():
+    g = counters_lib.Gauge("g")
+    g.set(7)
+    g.set(3)
+    assert g.value == 3.0
+    assert g.snapshot() == {"kind": "gauge", "value": 3}
+
+
+def test_histogram_exact_until_reservoir():
+    h = counters_lib.Histogram("h", reservoir=100)
+    for v in range(100):
+        h.observe(v)
+    pct = h.percentiles((50.0, 99.0))
+    assert pct[50.0] == pytest.approx(49.5)
+    assert h.count == 100 and h.sum == sum(range(100))
+    snap = h.snapshot()
+    assert snap["min"] == 0.0 and snap["max"] == 99.0
+    assert snap["mean"] == pytest.approx(49.5)
+
+
+def test_histogram_memory_bounded_counts_exact():
+    """The fix for the old unbounded ``ServiceMetrics._latencies``: any
+    number of observations, O(reservoir) memory, exact count/sum."""
+    h = counters_lib.Histogram("h", reservoir=64)
+    n = 50_000
+    for v in range(n):
+        h.observe(v)
+    assert len(h._samples) == 64  # bounded, no matter the volume
+    assert h.count == n  # exact
+    assert h.sum == sum(range(n))  # exact
+    # reservoir stays representative: median of U[0, n) within ~20%
+    assert abs(h.percentiles((50.0,))[50.0] - n / 2) < n * 0.2
+
+
+def test_histogram_deterministic_reservoir():
+    def fill(name):
+        h = counters_lib.Histogram(name, reservoir=32)
+        for v in range(1000):
+            h.observe(v)
+        return list(h._samples)
+
+    assert fill("same") == fill("same")  # seeded per name
+
+
+def test_registry_get_or_create_and_kind_clash():
+    r = counters_lib.Registry()
+    assert r.counter("x") is r.counter("x")
+    with pytest.raises(ValueError, match="already registered"):
+        r.gauge("x")
+    assert r.names() == ["x"]
+    assert r.get("missing") is None
+
+
+def test_registry_threadsafe_concurrent_adds():
+    r = counters_lib.Registry()
+
+    def work():
+        for _ in range(1000):
+            r.counter("hits").add(1)
+
+    threads = [threading.Thread(target=work) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert r.counter("hits").value == 8000
+
+
+def test_registry_snapshot_and_jsonl(tmp_path):
+    r = counters_lib.Registry()
+    r.counter("a").add(2)
+    r.gauge("b").set(1.5)
+    r.histogram("c").observe(0.25)
+    snap = r.snapshot()
+    assert snap["a"] == {"kind": "counter", "value": 2}
+    assert snap["c"]["count"] == 1
+    path = tmp_path / "metrics.jsonl"
+    r.export_jsonl(str(path), extra={"run": "t1"})
+    r.export_jsonl(str(path))
+    lines = [json.loads(l) for l in path.read_text().splitlines()]
+    assert len(lines) == 2  # appends: the trajectory format
+    assert lines[0]["run"] == "t1"
+    assert lines[1]["metrics"]["a"]["value"] == 2
+
+
+# --------------------------------------------------------------------- #
+# tracer
+# --------------------------------------------------------------------- #
+
+
+def test_tracer_nested_spans_chrome_export(tmp_path):
+    tr = trace_lib.Tracer()
+    with tr.span("outer", cat="test", tier="vmem"):
+        with tr.span("inner"):
+            pass
+    tr.instant("marker", note=7)
+    doc = tr.to_chrome()
+    assert trace_lib.validate_trace(doc) == []
+    evs = {e["name"]: e for e in doc["traceEvents"] if e["ph"] in ("X", "i")}
+    assert evs["outer"]["args"] == {"tier": "vmem"}
+    # inner recorded first (exits first) and is contained in outer
+    outer, inner = evs["outer"], evs["inner"]
+    assert outer["ts"] <= inner["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1e-6
+    assert evs["marker"]["args"] == {"note": 7}
+    # thread-name metadata present for the recording thread
+    assert any(e["ph"] == "M" and e["name"] == "thread_name" for e in doc["traceEvents"])
+    path = tmp_path / "t.json"
+    tr.export(str(path))
+    assert trace_lib.validate_trace(json.loads(path.read_text())) == []
+
+
+def test_tracer_disabled_is_noop():
+    tr = trace_lib.Tracer()
+    tr.enabled = False
+    with tr.span("invisible"):
+        pass
+    tr.instant("also-invisible")
+    assert tr.events() == []
+    assert tr.span("x") is tr.span("y")  # shared null span, zero alloc
+
+
+def test_tracer_ring_bounded_and_counts_drops():
+    tr = trace_lib.Tracer(max_events=8)
+    for i in range(20):
+        tr.instant(f"e{i}")
+    assert len(tr.events()) == 8
+    assert tr.dropped == 12
+    assert tr.to_chrome()["otherData"]["dropped_events"] == 12
+
+
+def test_validate_trace_flags_malformed():
+    assert trace_lib.validate_trace([]) != []
+    assert trace_lib.validate_trace({"traceEvents": "nope"}) != []
+    bad = {
+        "traceEvents": [
+            {"name": "x", "ph": "Z", "pid": 1, "tid": 1},
+            {"name": "", "ph": "i", "ts": 0, "pid": 1, "tid": 1},
+            {"name": "y", "ph": "X", "ts": 0, "dur": -1, "pid": 1, "tid": 1},
+        ]
+    }
+    errors = trace_lib.validate_trace(bad)
+    assert len(errors) == 3
+
+
+def test_tracer_threadsafe():
+    tr = trace_lib.Tracer()
+
+    def work(k):
+        for i in range(200):
+            with tr.span(f"t{k}"):
+                pass
+
+    threads = [threading.Thread(target=work, args=(k,)) for k in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    evs = tr.events()
+    assert len(evs) == 800  # no lost events under contention
+    # distinct tracks per live thread (idents may be reused once a
+    # thread exits, so the exact count is OS-dependent)
+    assert len({e["tid"] for e in evs}) >= 1
+
+
+# --------------------------------------------------------------------- #
+# stall attribution
+# --------------------------------------------------------------------- #
+
+
+def test_stall_clock_exhaustive_attribution():
+    r = counters_lib.Registry()
+    clock = stall_lib.StallClock(r)
+    clock.start()
+    clock.lap("queue_wait")
+    clock.lap("host_assembly")
+    clock.lap("device_dispatch")
+    clock.lap("vocab_merge")
+    clock.stop()
+    rep = stall_lib.report(r)
+    # every segment lands in exactly one bucket: Σ buckets == wall
+    assert rep["attributed_s"] == rep["wall_s"] > 0
+    assert set(rep["buckets_s"]) == set(stall_lib.BUCKETS)
+    assert sum(rep["fractions"].values()) == pytest.approx(1.0, abs=0.01)
+    # lap before start is a no-op segment, stop is idempotent
+    clock.stop()
+    assert stall_lib.report(r)["wall_s"] == rep["wall_s"]
+
+
+def test_stall_report_empty_registry():
+    rep = stall_lib.report(counters_lib.Registry())
+    assert rep["wall_s"] == 0.0
+    assert all(v == 0.0 for v in rep["fractions"].values())
+
+
+# --------------------------------------------------------------------- #
+# the non-semantic guarantee: bit-identity with instrumentation on
+# --------------------------------------------------------------------- #
+
+
+def _run_offline(buf, schema):
+    pc = P.PipelineConfig(schema=schema, max_rows_per_chunk=256)
+    pipe = P.PiperPipeline(pc)
+    state = pipe.build_state_stream(synth.chunk_stream(buf, 16384))
+    outs = list(
+        pipe.run_stream(lambda: synth.chunk_stream(buf, 16384))
+    )
+    lab = np.concatenate([np.asarray(o.label)[np.asarray(o.valid)] for o in outs])
+    den = np.concatenate([np.asarray(o.dense)[np.asarray(o.valid)] for o in outs])
+    spa = np.concatenate([np.asarray(o.sparse)[np.asarray(o.valid)] for o in outs])
+    return np.asarray(state.first_pos), lab, den, spa
+
+
+def test_tracing_and_stage_spans_non_semantic(criteo_small, instrumented):
+    """The acceptance pin: tracing enabled + stage spans (split decode
+    dispatch) produce byte-for-byte the outputs of the uninstrumented
+    run — loop-① state included."""
+    buf, _, cfg = criteo_small
+    obs.disable()
+    obs.set_stage_spans(False)
+    ref = _run_offline(buf, cfg.schema)
+    obs.enable()
+    obs.set_stage_spans(True)
+    got = _run_offline(buf, cfg.schema)
+    for r, g in zip(ref, got):
+        np.testing.assert_array_equal(r, g)
+    # and the instrumented run actually recorded the span hierarchy
+    names = {e["name"] for e in obs.tracer().events()}
+    assert {"loop1/chunk", "loop2/chunk", "decode", "vocab_update"} <= names
+
+
+def test_stage_span_labels_carry_tier_and_route(criteo_small, instrumented):
+    buf, _, cfg = criteo_small
+    _run_offline(buf, cfg.schema)
+    by_name = {}
+    for e in obs.tracer().events():
+        by_name.setdefault(e["name"], e)
+    for name in ("loop1/chunk", "loop2/chunk"):
+        args = by_name[name]["args"]
+        assert args["engine"] == "piper"
+        assert "tier" in args and "route" in args
+    doc = obs.tracer().to_chrome()
+    assert trace_lib.validate_trace(doc) == []
+
+
+def test_engine_counters_accumulate(criteo_small, instrumented):
+    from repro.core import vocab as vocab_lib
+
+    buf, _, cfg = criteo_small
+    reg = obs.metrics()
+    c1 = reg.counter("pipeline.loop1_rows_total").value
+    c2 = reg.counter("pipeline.loop2_rows_total").value
+    b1 = reg.counter("pipeline.loop1_bytes_total").value
+    pc = P.PipelineConfig(schema=cfg.schema, max_rows_per_chunk=256)
+    pipe = P.PiperPipeline(pc)
+    state = pipe.build_state_stream(synth.chunk_stream(buf, 16384))
+    list(
+        pipe.transform_stream(
+            vocab_lib.finalize(state), synth.chunk_stream(buf, 16384)
+        )
+    )
+    assert reg.counter("pipeline.loop1_rows_total").value - c1 == cfg.rows
+    assert reg.counter("pipeline.loop2_rows_total").value - c2 == cfg.rows
+    assert reg.counter("pipeline.loop1_bytes_total").value - b1 >= len(buf)
+
+
+# --------------------------------------------------------------------- #
+# service: stall report + bounded metrics
+# --------------------------------------------------------------------- #
+
+
+def test_service_stall_report_sums_to_wall(criteo_small):
+    buf, table, cfg = criteo_small
+    pc = P.PipelineConfig(schema=cfg.schema)
+    pipe = P.PiperPipeline(pc)
+    state = pipe.build_state_stream(synth.chunk_stream(buf, 16384))
+    spans = synth.row_spans(buf)
+
+    svc = StreamingPreprocessService(pc, state, bucket_rows=(32, 128), queue_depth=8)
+    with svc:
+        handles = [
+            svc.submit(buf[spans[i * 8, 0] : spans[i * 8 + 7, 1]]) for i in range(20)
+        ]
+        svc.drain(timeout=120)
+        for h in handles:
+            assert h.result()["label"].shape[0] == 8
+    rep = svc.stall_report()
+    # the acceptance bound: bucket times sum to within 5% of wall
+    assert rep["wall_s"] > 0
+    assert rep["attributed_s"] == pytest.approx(rep["wall_s"], rel=0.05)
+    assert sum(rep["buckets_s"].values()) == pytest.approx(rep["wall_s"], rel=0.05)
+    # the device-bound share must be visible (work actually dispatched)
+    assert rep["buckets_s"]["device_dispatch"] > 0
+    # and the service's registry carries the queue/packing instruments
+    snap = svc.registry.snapshot()
+    assert snap["stream.batches_total"]["value"] > 0
+    assert snap["stream.bucket_occupancy"]["count"] > 0
+    assert 0.0 < snap["stream.bucket_occupancy"]["mean"] <= 1.0
+
+
+def test_service_metrics_is_registry_view_and_bounded():
+    r = counters_lib.Registry()
+    m = metrics_lib.ServiceMetrics(r)
+    n = metrics_lib.LATENCY_RESERVOIR + 500
+    m.note_submit(0.0)
+    for i in range(n):
+        m.record(0.001 * (i % 10 + 1), 4, now=float(i))
+    snap = m.snapshot()
+    assert snap["requests"] == n and snap["rows"] == 4 * n  # exact counts
+    hist = r.get("stream.request_latency_s")
+    assert len(hist._samples) == metrics_lib.LATENCY_RESERVOIR  # bounded
+    assert snap["p50_ms"] > 0 and snap["p99_ms"] >= snap["p50_ms"]
+    # same numbers visible through the registry (a view, not a silo)
+    assert r.get("stream.requests_total").value == n
+    m.reset()
+    assert m.snapshot()["requests"] == 0
+    assert r.get("stream.requests_total").value == 0

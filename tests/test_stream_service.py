@@ -169,6 +169,11 @@ def test_mid_stream_vocab_refresh(criteo_small, fmt):
 
 
 def test_no_recompile_after_warmup(criteo_small):
+    """The no-recompile guarantee, asserted on the scheduler's own
+    ``stream.recompiles_total`` counter (which measures compile-cache
+    growth around *every* dispatch) rather than external jit cache-miss
+    counting: after one warmup pass per bucket, the full bucket ladder
+    AND an atomic vocab refresh cause zero further compilations."""
     buf, table, cfg = criteo_small
     pc = P.PipelineConfig(schema=cfg.schema)
     pipe = P.PiperPipeline(pc)
@@ -177,24 +182,55 @@ def test_no_recompile_after_warmup(criteo_small):
     rows = cfg.rows
 
     svc = StreamingPreprocessService(pc, state, bucket_rows=BUCKETS, queue_depth=8)
+    recompiles = svc.registry.counter("stream.recompiles_total")
     with svc:
-        # warmup: hit every bucket once
+        # warmup: hit every bucket once — each first dispatch compiles
         for cap in BUCKETS:
             n = min(cap, rows)
             _submit_rows(svc, "utf8", buf, table, spans, 0, n).result(timeout=60)
-        warm = svc.compile_cache_size()
-        assert warm == len(BUCKETS)  # exactly one executable per bucket
+        assert recompiles.value == len(BUCKETS)  # one compile per bucket
+        assert svc.compile_cache_size() == len(BUCKETS)
 
-        # steady state: randomized request sizes, every bucket exercised
+        # steady state across the FULL ladder: sizes landing in every
+        # bucket, zero recompiles
         rng = np.random.default_rng(7)
         handles = []
-        for _ in range(40):
-            n = int(rng.integers(1, rows + 1))
-            handles.append(_submit_rows(svc, "utf8", buf, table, spans, 0, n))
+        for cap in BUCKETS:
+            for _ in range(8):
+                n = int(rng.integers(max(1, cap // 2), min(cap, rows) + 1))
+                handles.append(_submit_rows(svc, "utf8", buf, table, spans, 0, n))
         svc.drain(timeout=120)
         for h in handles:
             assert h.result()["label"].shape[0] > 0
-        assert svc.compile_cache_size() == warm  # zero cache misses
+        assert recompiles.value == len(BUCKETS)
+
+        # an atomic vocab refresh swaps the table as a jit *argument* —
+        # same shapes, so it must not invalidate any bucket executable
+        delta = vocab_lib.VocabState(
+            first_pos=pipe.init_state().first_pos, rows_seen=jnp.int32(rows)
+        )
+        for chunk in synth.chunk_stream(buf, 16384):
+            delta = pipe.vocab_step(delta, jax.tree.map(jnp.asarray, chunk))
+        prev = svc.vocab_state
+        svc.refresh_vocab(delta)
+        deadline = time.time() + 30
+        while svc.vocab_state is prev:
+            assert time.time() < deadline, "vocab swap never applied"
+            time.sleep(0.002)
+        assert svc.registry.counter("stream.vocab_apply_total").value >= 1
+
+        # post-swap: the whole ladder again, still zero recompiles
+        handles = [
+            _submit_rows(
+                svc, "utf8", buf, table, spans, 0, min(cap, rows)
+            )
+            for cap in BUCKETS
+        ]
+        svc.drain(timeout=120)
+        for h in handles:
+            assert h.result()["label"].shape[0] > 0
+        assert recompiles.value == len(BUCKETS)  # zero steady-state recompiles
+        assert svc.compile_cache_size() == len(BUCKETS)
 
 
 # --------------------------------------------------------------------- #
