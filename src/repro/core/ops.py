@@ -121,6 +121,8 @@ def fused_vocab_update(
     sparse: jnp.ndarray,
     valid: jnp.ndarray,
     use_kernel: bool = True,
+    *,
+    slab_range: int | None = None,
 ) -> vocab_lib.VocabState:
     """Whole loop-① chain — Modulus → GenVocab scatter-min — as ONE
     dispatch (paper §3.2/§4.4: the row streams through the operator
@@ -129,10 +131,14 @@ def fused_vocab_update(
 
     With ``use_kernel`` the chain runs through the fused Pallas kernel
     (kernels/fused_vocab), tier-routed: state stacks within the VMEM
-    budget stay resident on-chip across row tiles; larger stacks fall
-    back to the XLA modulus + scatter-min oracle. Without it, the
-    unfused ops compose — **bit-identical** state either way (scatter-min
-    is order-independent), used as the differential oracle.
+    budget stay resident on-chip across row tiles; larger stacks stream
+    HBM-resident slabs through VMEM (one dispatch either way); only
+    degenerate widths fall back to the XLA modulus + scatter-min oracle.
+    Without it, the unfused ops compose — **bit-identical** state either
+    way (scatter-min is order-independent), used as the differential
+    oracle. ``slab_range`` forces the slab tier with that per-column
+    slab width (``PipelineConfig.vocab_slab_range``; None = tier policy
+    decides).
 
     sparse int32 [rows, n_cols] (raw hash bitcasts); valid bool [rows]
     → the updated :class:`~repro.core.vocab.VocabState`. With
@@ -143,7 +149,7 @@ def fused_vocab_update(
     if use_kernel:
         from repro.kernels.fused_vocab import ops as fv_ops
 
-        return fv_ops.fused_update(state, sparse, valid)
+        return fv_ops.fused_update(state, sparse, valid, slab_range=slab_range)
     modded = positive_modulus(sparse, int(state.first_pos.shape[1]))
     return vocab_lib.update(state, modded, valid)
 

@@ -118,6 +118,20 @@ class PipelineConfig:
     # bit-identical on sparse ids/labels/state and identical-formula on
     # dense either way.
     use_fused_decode: bool | None = None
+    # Carry the occurrence-count plane beside first_pos in the loop-①
+    # state (VocabState.counts) — required by the frequency-capped
+    # finalizers (vocab.finalize_topk / finalize_min_count). Doubles the
+    # per-entry state footprint, so it tightens the VMEM residency
+    # cutoff; counts merge by elementwise + (order-independent), keeping
+    # every engine bit-deterministic under resharding. The bytes-in
+    # loop-① kernel carries no count plane, so enabling this routes utf8
+    # loop ① through decode + the decoded-input (slab-capable) chain.
+    track_vocab_counts: bool = False
+    # EXPERT/TEST KNOB — force loop ①'s hbm_slab tier with this
+    # per-column slab width (128-lane multiples; None = tier policy
+    # decides from the state footprint). Lets tests and benchmarks pin
+    # slab/VMEM bit-identity on ranges that fit both tiers.
+    vocab_slab_range: int | None = None
     # The declarative per-column preprocessing program (core/plan.py).
     # None = `plan.criteo_default(schema)` — the paper's exact chain, so
     # every pre-IR call site keeps its behavior bit-for-bit. Compiled once
@@ -184,6 +198,8 @@ class PiperPipeline:
             use_kernels=config.use_kernels,
             fused_vocab=config.fused_vocab_enabled,
             fused_decode=config.fused_decode_enabled,
+            track_counts=config.track_vocab_counts,
+            vocab_slab_range=config.vocab_slab_range,
         )
         # Bytes-in routing is static per engine: utf8 feed + an identity-
         # layout plan + the hint on. The per-chunk VMEM/HBM tier choice
@@ -219,6 +235,7 @@ class PiperPipeline:
                 else self.compiled.vocab_route
             ),
             "tier": self.compiled.vocab_tier,
+            "slabs": self.compiled.vocab_slabs,
         }
         self._xform_span_labels = {
             "engine": "piper",
@@ -347,7 +364,25 @@ class PiperPipeline:
         """
         state = self.init_state()
         split = self._stage_split(self._bytes_vocab)
+        cap = self.config.max_rows_per_chunk
+        # Host-side stream-length guard: positions are int32, so a stream
+        # may carry at most vocab.MAX_ROWS rows (beyond that the kernels
+        # saturate and silently drop rows). Track a no-sync upper bound
+        # (rows_seen inside the jitted step is an unsynced device value);
+        # only when the bound would cross the ceiling, sync the true
+        # count and fail loudly if the next chunk could overflow.
+        rows_ub = 0
         for chunk in chunks:
+            rows_ub += cap
+            if rows_ub > vocab_lib.MAX_ROWS:
+                seen = int(state.rows_seen)
+                if seen + cap > vocab_lib.MAX_ROWS:
+                    raise OverflowError(
+                        f"loop ① stream exceeds the int32 position ceiling: "
+                        f"{seen} rows seen + up to {cap} more > "
+                        f"{vocab_lib.MAX_ROWS}"
+                    )
+                rows_ub = seen + cap
             self._note_chunk("loop1", chunk)
             chunk = jax.tree.map(jnp.asarray, chunk)
             with obs.span("loop1/chunk", **self._vocab_span_labels):

@@ -243,6 +243,8 @@ class CompiledPlan:
         use_kernels: bool,
         fused_vocab: bool = False,
         fused_decode: bool = False,
+        track_counts: bool = False,
+        vocab_slab_range: int | None = None,
     ):
         validate_plan(plan, schema)
         self.plan = plan
@@ -251,6 +253,8 @@ class CompiledPlan:
         self.fused_vocab = fused_vocab
         self.fused_decode = fused_decode
         self.use_kernels = use_kernels
+        self.track_counts = track_counts
+        self.vocab_slab_range = vocab_slab_range
         self.n_dense_out = plan.n_dense_out
         self.n_sparse_out = plan.n_sparse_out
 
@@ -357,6 +361,8 @@ class CompiledPlan:
             fused_decode
             and schema.n_sparse > 0
             and self._vocab_sources == identity_sparse
+            # the bytes-in kernel carries no count plane
+            and not track_counts
         )
         self.decode_xform_dispatch = (
             fused_decode
@@ -386,20 +392,39 @@ class CompiledPlan:
     def vocab_tier(self) -> str:
         """Memory tier of the loop-① state dispatch — computed from the
         rows the ``VocabState`` accumulator actually carries (crosses
-        included), so it matches what ``fused_vocab_tier()`` picks at
-        runtime."""
+        included, count plane included), so it matches what
+        ``fused_vocab_tier()`` picks at runtime."""
         from repro.kernels.fused_vocab import ops as fv_ops
 
         return fv_ops.fused_vocab_tier(
-            max(self.n_vocab_columns, 1), self.vocab_range
+            max(self.n_vocab_columns, 1),
+            self.vocab_range,
+            slab_range=self.vocab_slab_range,
+            track_counts=self.track_counts,
+        )
+
+    @property
+    def vocab_slabs(self) -> int:
+        """How many state slabs loop ① streams per chunk (1 off the
+        hbm_slab tier) — the obs spans tag dispatches with it."""
+        from repro.kernels.fused_vocab import ops as fv_ops
+
+        return fv_ops.vocab_slab_count(
+            max(self.n_vocab_columns, 1),
+            self.vocab_range,
+            slab_range=self.vocab_slab_range,
+            track_counts=self.track_counts,
         )
 
     @property
     def vocab_route(self) -> str:
         """Where the compiler sent the vocab-building half:
-        ``"fused/vmem"``, ``"fused/hbm"``, or ``"unfused"``."""
+        ``"fused/vmem"``, ``"fused/hbm_slab"``, ``"xla_fallback"``
+        (fusion requested but only the oracle admissible), or
+        ``"unfused"``."""
         if self._fused_vocab_dispatch:
-            return f"fused/{self.vocab_tier}"
+            tier = self.vocab_tier
+            return tier if tier == "xla_fallback" else f"fused/{tier}"
         return "unfused"
 
     @property
@@ -414,9 +439,10 @@ class CompiledPlan:
     @property
     def decode_vocab_route(self) -> str:
         """Where a utf8 engine's loop ① enters: ``"bytes/vmem"`` (the
-        bytes-in kernel), ``"bytes/hbm"`` (bytes-in requested but the
-        state over-budget — ref decode + the decoded-input chain), or
-        ``"decoded"`` (decode runs as its own dispatch)."""
+        bytes-in kernel), ``"bytes/hbm_slab"`` / ``"bytes/xla_fallback"``
+        (bytes-in requested but the state over-budget — ref decode + the
+        tier-routed decoded-input chain), or ``"decoded"`` (decode runs
+        as its own dispatch)."""
         if self.decode_vocab_dispatch:
             return f"bytes/{self.vocab_tier}"
         return "decoded"
@@ -548,7 +574,11 @@ class CompiledPlan:
 
     # -- loop ① — vocab-building half ---------------------------------- #
     def init_state(self) -> vocab_lib.VocabState:
-        return vocab_lib.VocabState.init(self.n_vocab_columns, self.vocab_range)
+        return vocab_lib.VocabState.init(
+            self.n_vocab_columns,
+            self.vocab_range,
+            track_counts=self.track_counts,
+        )
 
     def vocab_step(
         self, state: vocab_lib.VocabState, batch: schema_lib.TabularBatch
@@ -564,7 +594,9 @@ class CompiledPlan:
         identical to the unfused chain below on every path."""
         raw = self._gather_sparse(batch.sparse, self._vocab_sources)
         if self._fused_vocab_dispatch:
-            return ops.fused_vocab_update(state, raw, batch.valid)
+            return ops.fused_vocab_update(
+                state, raw, batch.valid, slab_range=self.vocab_slab_range
+            )
         modded = ops.positive_modulus(raw, self.vocab_range)
         if self.use_kernels:
             from repro.kernels.vocab import ops as vocab_ops
@@ -666,6 +698,8 @@ def compile_plan(
     use_kernels: bool = False,
     fused_vocab: bool | None = None,
     fused_decode: bool | None = None,
+    track_counts: bool = False,
+    vocab_slab_range: int | None = None,
 ) -> CompiledPlan:
     """Validate + group + route ``plan`` into a :class:`CompiledPlan`.
 
@@ -680,6 +714,10 @@ def compile_plan(
     to **off** until the compiled lowering is TPU-validated, mirroring
     ``PipelineConfig.fused_decode_enabled``); ``use_kernels`` routes
     the unfused per-op stages through their Pallas kernels.
+    ``track_counts`` builds the state with the occurrence-count plane
+    (``PipelineConfig.track_vocab_counts`` — required by the capped
+    finalizers); ``vocab_slab_range`` forces loop ①'s hbm_slab tier
+    with that per-column slab width.
     """
     if fused is None or fused_vocab is None:
         from repro import kernels as kernels_lib
@@ -696,4 +734,6 @@ def compile_plan(
         use_kernels=use_kernels,
         fused_vocab=bool(fused_vocab),
         fused_decode=bool(fused_decode),
+        track_counts=bool(track_counts),
+        vocab_slab_range=vocab_slab_range,
     )

@@ -141,6 +141,8 @@ class ShardedPiperPipeline:
         needs to know how many rows the others have consumed.
         """
 
+        track_counts = self.compiled.track_counts
+
         def local(chunks_blk, offsets_blk):
             chunks_local = jax.tree.map(lambda x: x[0], chunks_blk)
             offs = offsets_blk[0]
@@ -149,18 +151,24 @@ class ShardedPiperPipeline:
             # up named on the XLA timeline next to the host spans
             @jax.named_scope("piper.shard_loop1")
             def body(carry, xs):
-                first_pos, n_valid = carry
+                first_pos, counts, n_valid = carry
                 chunk, off = xs
-                st = vocab_lib.VocabState(first_pos=first_pos, rows_seen=off)
+                st = vocab_lib.VocabState(
+                    first_pos=first_pos, rows_seen=off, counts=counts
+                )
                 st = self._pipe.vocab_step(st, chunk)
                 # vocab_step advances rows_seen by the chunk's valid rows
-                return (st.first_pos, n_valid + st.rows_seen - off), None
+                return (st.first_pos, st.counts, n_valid + st.rows_seen - off), None
 
             init = self._pipe.init_state()
-            (first_pos, n_valid), _ = jax.lax.scan(
-                body, (init.first_pos, init.rows_seen), (chunks_local, offs)
+            (first_pos, counts, n_valid), _ = jax.lax.scan(
+                body,
+                (init.first_pos, init.counts, init.rows_seen),
+                (chunks_local, offs),
             )
-            state = vocab_lib.VocabState(first_pos=first_pos, rows_seen=n_valid)
+            state = vocab_lib.VocabState(
+                first_pos=first_pos, rows_seen=n_valid, counts=counts
+            )
             return jax.tree.map(lambda x: x[None], state)
 
         return shard_map(
@@ -173,6 +181,9 @@ class ShardedPiperPipeline:
             out_specs=vocab_lib.VocabState(
                 first_pos=P(self.row_axes, None, None),
                 rows_seen=P(self.row_axes),
+                counts=(
+                    P(self.row_axes, None, None) if track_counts else None
+                ),
             ),
             check_rep=False,
         )(chunks, offsets)
@@ -193,6 +204,7 @@ class ShardedPiperPipeline:
             shards=self.n_shards,
             route=self.compiled.vocab_route,
             tier=self.compiled.vocab_tier,
+            slabs=self.compiled.vocab_slabs,
         ):
             states = self._jit_shard_states(chunks, offsets)
         # the epoch's one synchronization point: log-depth monoid reduce

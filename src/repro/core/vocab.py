@@ -27,6 +27,18 @@ Memory tiers (paper §3.2, §4.4.6): the finalized table for vocab ≤
 ``VMEM_TIER_MAX`` entries is gathered through the Pallas VMEM kernel
 ("SRAM mode"); larger tables stay HBM-resident and use a plain XLA gather
 ("HBM mode"). ``ops.apply_vocab`` makes the choice.
+
+Position arithmetic and the stream-length ceiling
+-------------------------------------------------
+Row positions are int32 and ``NEVER = int32.max`` is reserved as the
+absent sentinel, so the largest representable position is ``NEVER - 1``
+and a stream tops out at :data:`MAX_ROWS` (= 2³¹ − 1) rows. All position
+arithmetic goes through :func:`positions` / :func:`advance_rows_seen`,
+which compute in uint32 and **saturate at NEVER**: rows past the ceiling
+scatter the min identity (i.e. are dropped from the state, never wrapped
+into negative positions or aliased onto the sentinel). Host-driven entry
+points additionally raise ``OverflowError`` via :func:`check_row_ceiling`
+so the truncation is loud, not silent.
 """
 
 from __future__ import annotations
@@ -39,24 +51,123 @@ import jax.numpy as jnp
 
 # Sentinel for "value never seen". Must exceed any real position.
 NEVER = jnp.iinfo(jnp.int32).max
-# Entries (per column) that still fit the VMEM ("SRAM") tier comfortably:
-# 2 MiB of int32 per column table leaves room for double buffering.
+# Hard stream-length ceiling: row i carries position i, positions are
+# int32, and NEVER is reserved — so at most NEVER (= 2³¹ − 1) rows carry
+# representable positions. See the module docstring.
+MAX_ROWS = int(NEVER)
+# Per-column entries that still fit the on-chip ("SRAM") tier for a
+# *single-column* table. The fused loop-① dispatch grades THREE tiers
+# from this cutoff plus its whole-stack residency budgets
+# (kernels/fused_vocab/ops.py — the authoritative policy):
+#   vmem         — range ≤ VMEM_TIER_MAX and the whole [n_cols, range]
+#                  stack fits FUSED_STATE_VMEM_BYTES: state resident
+#                  on-chip for the entire call;
+#   hbm_slab     — larger: state lives in HBM partitioned into
+#                  [n_cols, slab_range] slabs, each streamed through
+#                  VMEM (double-buffered by the Pallas pipeline);
+#   xla_fallback — degenerate widths where not even one 128-lane slab
+#                  per column fits the slab budget: XLA scatter-min.
 VMEM_TIER_MAX = 512 * 1024
+
+
+def positions(rows_seen: jnp.ndarray, rows: int, valid: jnp.ndarray) -> jnp.ndarray:
+    """Global int32 positions for one chunk's rows, overflow-safe.
+
+    Arithmetic runs in uint32 (headroom to 2³² − 1, so ``rows_seen`` near
+    ``NEVER`` plus any realistic chunk length cannot wrap) and saturates
+    at ``NEVER``: a row past :data:`MAX_ROWS` scatters the min identity
+    instead of a wrapped negative position or an alias of the sentinel.
+    Invalid (padding) rows scatter ``NEVER`` too.
+    """
+    pos = rows_seen.astype(jnp.uint32) + jnp.arange(rows, dtype=jnp.uint32)
+    pos = jnp.minimum(pos, jnp.uint32(NEVER)).astype(jnp.int32)
+    return jnp.where(valid, pos, NEVER)
+
+
+def advance_rows_seen(rows_seen: jnp.ndarray, n_new: jnp.ndarray) -> jnp.ndarray:
+    """``rows_seen + n_new`` in uint32, saturated at ``NEVER`` (int32).
+
+    Keeps the stream counter from wrapping negative past the ceiling —
+    once saturated, every later position saturates too, so overflow rows
+    are dropped consistently rather than corrupting the scatter-min.
+    """
+    total = rows_seen.astype(jnp.uint32) + n_new.astype(jnp.uint32)
+    return jnp.minimum(total, jnp.uint32(NEVER)).astype(jnp.int32)
+
+
+def check_row_ceiling(rows_seen, rows: int) -> None:
+    """Raise ``OverflowError`` if absorbing ``rows`` more rows would pass
+    :data:`MAX_ROWS`. Host-side guard only: a no-op under tracing (jitted
+    paths rely on the saturating arithmetic above), loud in eager use and
+    in the host-driven engines' per-chunk checks."""
+    if isinstance(rows_seen, jax.core.Tracer):
+        return
+    seen = int(rows_seen)
+    if seen + int(rows) > MAX_ROWS:
+        raise OverflowError(
+            f"loop ① would absorb {rows} rows at offset {seen}, past the "
+            f"int32 position ceiling of {MAX_ROWS} total rows (positions "
+            "are int32 with NEVER reserved as the absent sentinel); split "
+            "the stream or re-key it before the ceiling"
+        )
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class VocabState:
-    """Loop-1 accumulator: first-occurrence position per (column, value)."""
+    """Loop-1 accumulator: first-occurrence position per (column, value).
+
+    ``counts`` is optional (``None`` = untracked): when present it carries
+    per-(column, value) occurrence counts accumulated beside ``first_pos``
+    — the ingredient for the frequency-capped finalizers
+    (:func:`finalize_topk` / :func:`finalize_min_count`). Count-tracking
+    states and untracked states do not merge (:func:`check_compatible`).
+    """
 
     first_pos: jnp.ndarray  # int32 [n_columns, vocab_range], NEVER = absent
     rows_seen: jnp.ndarray  # int32 [] — global row counter (stream offset)
+    counts: jnp.ndarray | None = None  # int32 [n_columns, vocab_range] | None
 
     @classmethod
-    def init(cls, n_columns: int, vocab_range: int) -> "VocabState":
+    def init(
+        cls, n_columns: int, vocab_range: int, track_counts: bool = False
+    ) -> "VocabState":
         return cls(
             first_pos=jnp.full((n_columns, vocab_range), NEVER, jnp.int32),
             rows_seen=jnp.zeros((), jnp.int32),
+            counts=(
+                jnp.zeros((n_columns, vocab_range), jnp.int32)
+                if track_counts
+                else None
+            ),
+        )
+
+
+def check_compatible(a: VocabState, b: VocabState) -> None:
+    """Raise a clear ``ValueError`` unless ``a`` and ``b`` can merge.
+
+    Shape/dtype mismatches (different ``vocab_range`` or column count, or
+    a count-tracking state against an untracked one) previously surfaced
+    as opaque broadcast errors deep inside jnp; this names the mismatch.
+    Shapes are static under tracing, so the check also fires inside jit.
+    """
+    if a.first_pos.shape != b.first_pos.shape:
+        raise ValueError(
+            "cannot merge VocabStates with different vocab layouts: "
+            f"first_pos {tuple(a.first_pos.shape)} vs "
+            f"{tuple(b.first_pos.shape)} — loop ① states merge only when "
+            "built with the same (n_columns, vocab_range)"
+        )
+    if a.first_pos.dtype != b.first_pos.dtype:
+        raise ValueError(
+            "cannot merge VocabStates with different first_pos dtypes: "
+            f"{a.first_pos.dtype} vs {b.first_pos.dtype}"
+        )
+    if (a.counts is None) != (b.counts is None):
+        raise ValueError(
+            "cannot merge a count-tracking VocabState with an untracked "
+            "one — build every loop ① shard with the same track_counts "
+            "setting (PipelineConfig.track_vocab_counts)"
         )
 
 
@@ -65,17 +176,31 @@ def update(state: VocabState, modded: jnp.ndarray, valid: jnp.ndarray) -> VocabS
 
     modded: int32 [rows, n_columns] already in [0, vocab_range)
     valid:  bool  [rows]
+
+    Positions saturate at ``NEVER`` past :data:`MAX_ROWS` (see
+    :func:`positions`); in eager use the ceiling additionally raises.
+    When ``state.counts`` is tracked, every valid row below the ceiling
+    increments its (column, value) count — rows dropped by saturation are
+    dropped from the counts too, so the fused kernels match bit-for-bit.
     """
     rows = modded.shape[0]
-    pos = state.rows_seen + jnp.arange(rows, dtype=jnp.int32)
-    # Invalid (padding) rows scatter NEVER, which min() ignores.
-    pos = jnp.where(valid, pos, NEVER)
+    check_row_ceiling(state.rows_seen, rows)
+    pos = positions(state.rows_seen, rows, valid)
     cols = jnp.arange(modded.shape[1], dtype=jnp.int32)[None, :]
-    first_pos = state.first_pos.at[
-        jnp.broadcast_to(cols, modded.shape), modded
-    ].min(jnp.broadcast_to(pos[:, None], modded.shape))
-    rows_seen = state.rows_seen + jnp.sum(valid.astype(jnp.int32))
-    return VocabState(first_pos=first_pos, rows_seen=rows_seen)
+    bcols = jnp.broadcast_to(cols, modded.shape)
+    first_pos = state.first_pos.at[bcols, modded].min(
+        jnp.broadcast_to(pos[:, None], modded.shape)
+    )
+    counts = state.counts
+    if counts is not None:
+        inc = (pos < NEVER).astype(jnp.int32)  # valid AND below the ceiling
+        counts = counts.at[bcols, modded].add(
+            jnp.broadcast_to(inc[:, None], modded.shape)
+        )
+    rows_seen = advance_rows_seen(
+        state.rows_seen, jnp.sum(valid.astype(jnp.int32))
+    )
+    return VocabState(first_pos=first_pos, rows_seen=rows_seen, counts=counts)
 
 
 def merge(a: VocabState, b: VocabState) -> VocabState:
@@ -92,14 +217,20 @@ def merge(a: VocabState, b: VocabState) -> VocabState:
     and ``NEVER``/``0`` are their identities. That is what lets a
     multi-instance deployment reduce per-shard states in any order and in
     log-depth trees (:func:`merge_tree`) — the paper's "cheap merge" that
-    replaces the CPU baseline's serial sub-dictionary merge.
+    replaces the CPU baseline's serial sub-dictionary merge. Tracked
+    ``counts`` merge by elementwise ``+`` (identity: all-zero), so the
+    frequency-capped finalizers stay bit-deterministic under resharding.
 
     Shards may also merge element-wise when states carry a leading stack
     axis (``first_pos [n, C, V]``); :func:`merge_tree` relies on this.
+    Incompatible layouts raise a clear ``ValueError``
+    (:func:`check_compatible`) instead of an opaque broadcast error.
     """
+    check_compatible(a, b)
     return VocabState(
         first_pos=jnp.minimum(a.first_pos, b.first_pos),
-        rows_seen=a.rows_seen + b.rows_seen,
+        rows_seen=advance_rows_seen(a.rows_seen, b.rows_seen),
+        counts=None if a.counts is None else a.counts + b.counts,
     )
 
 
@@ -109,8 +240,9 @@ def merge_tree(states: VocabState) -> VocabState:
     Args:
       states: a :class:`VocabState` whose leaves carry a leading shard
         axis — ``first_pos int32 [n_shards, n_columns, vocab_range]``,
-        ``rows_seen int32 [n_shards]`` — as produced by running loop ①
-        under ``shard_map`` over the ``data`` mesh axis.
+        ``rows_seen int32 [n_shards]`` (and ``counts`` alike when
+        tracked) — as produced by running loop ① under ``shard_map``
+        over the ``data`` mesh axis.
 
     Returns:
       The single merged :class:`VocabState` (no leading axis), equal to
@@ -119,8 +251,8 @@ def merge_tree(states: VocabState) -> VocabState:
       a large shard count reduces in O(log n) dependent steps.
 
     The stack is padded to a power of two with the monoid identity
-    (``VocabState.init``: all-``NEVER`` positions, zero row count), which
-    leaves the result unchanged.
+    (``VocabState.init``: all-``NEVER`` positions, zero row count, zero
+    counts), which leaves the result unchanged.
     """
     n = int(states.first_pos.shape[0])
     pow2 = 1 << max(n - 1, 0).bit_length()  # next power of two ≥ n
@@ -136,6 +268,18 @@ def merge_tree(states: VocabState) -> VocabState:
             rows_seen=jnp.concatenate(
                 [states.rows_seen, jnp.zeros(pad, jnp.int32)]
             ),
+            counts=(
+                None
+                if states.counts is None
+                else jnp.concatenate(
+                    [
+                        states.counts,
+                        jnp.zeros(
+                            (pad,) + states.counts.shape[1:], jnp.int32
+                        ),
+                    ]
+                )
+            ),
         )
     while pow2 > 1:
         half = pow2 // 2
@@ -150,14 +294,28 @@ def merge_tree(states: VocabState) -> VocabState:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class Vocabulary:
-    """Finalized tables: value → appearing-sequence ordinal."""
+    """Finalized tables: value → appearing-sequence ordinal.
+
+    From :func:`finalize` every *present* value gets a dense ordinal in
+    ``[0, sizes[c])`` and absent values map to 0. From the frequency-
+    capped finalizers (:func:`finalize_topk` / :func:`finalize_min_count`)
+    every *kept* value gets a dense ordinal in ``[0, sizes[c])`` and every
+    other value — dropped or never seen — maps to the explicit **OOV
+    ordinal** ``sizes[c]``, so a serving embedding needs ``sizes[c] + 1``
+    rows per column.
+    """
 
     table: jnp.ndarray   # int32 [n_columns, vocab_range]
-    sizes: jnp.ndarray   # int32 [n_columns] — number of present values
+    sizes: jnp.ndarray   # int32 [n_columns] — number of present/kept values
 
     @property
     def vocab_range(self) -> int:
         return int(self.table.shape[1])
+
+    @property
+    def oov_ordinals(self) -> jnp.ndarray:
+        """Per-column OOV ordinal of the capped finalizers (== sizes)."""
+        return self.sizes
 
 
 @functools.partial(jax.jit)
@@ -175,6 +333,83 @@ def _finalize(first_pos: jnp.ndarray):
 
 def finalize(state: VocabState) -> Vocabulary:
     table, sizes = _finalize(state.first_pos)
+    return Vocabulary(table=table, sizes=sizes)
+
+
+@functools.partial(jax.jit)
+def _capped_table(first_pos: jnp.ndarray, kept: jnp.ndarray):
+    """Ordinals for an explicit keep-mask: kept values rank by first
+    occurrence (appearing-sequence order among the keepers); everything
+    else maps to the per-column OOV ordinal ``sizes[c]``."""
+    key = jnp.where(kept, first_pos, NEVER)
+    order = jnp.argsort(key, axis=1, stable=True)
+    ranks = jnp.argsort(order, axis=1, stable=True)
+    sizes = jnp.sum(kept.astype(jnp.int32), axis=1)
+    table = jnp.where(kept, ranks, sizes[:, None]).astype(jnp.int32)
+    return table, sizes.astype(jnp.int32)
+
+
+def _require_counts(state: VocabState) -> jnp.ndarray:
+    if state.counts is None:
+        raise ValueError(
+            "frequency-capped finalize needs a count-tracking VocabState — "
+            "build loop ① with VocabState.init(..., track_counts=True) "
+            "(PipelineConfig.track_vocab_counts=True)"
+        )
+    return state.counts
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _topk_kept(first_pos: jnp.ndarray, counts: jnp.ndarray, k: int):
+    present = first_pos < NEVER
+    # Order values by (count desc, first occurrence asc). Both keys come
+    # from commutative-monoid accumulators, and (count, first_pos) is a
+    # total order over present values (positions are unique), so the
+    # kept set — and therefore the table — is bit-deterministic under
+    # any shard/merge order. Absent values sort behind every present one
+    # (their count key is +1 > every negated real count).
+    neg_count = jnp.where(present, -counts, 1)
+    pos_key = jnp.where(present, first_pos, NEVER)
+    order = jnp.lexsort((pos_key, neg_count), axis=1)
+    rank = jnp.argsort(order, axis=1, stable=True)
+    return present & (rank < k)
+
+
+def finalize_topk(state: VocabState, k: int) -> Vocabulary:
+    """Frequency-capped finalize: keep each column's ``k`` most frequent
+    values, ties broken by earlier first occurrence.
+
+    Kept values get dense ordinals in appearing-sequence order (rank of
+    ``first_pos`` among the keepers — so the ordinal assignment matches
+    :func:`finalize` restricted to the kept set); every other value maps
+    to the explicit OOV ordinal ``sizes[c]``. Requires a count-tracking
+    state (``track_counts=True``). Deterministic under any merge order:
+    both ``counts`` (sum) and ``first_pos`` (min) are commutative-monoid
+    reductions, and the sort key (count, first-occurrence) is a total
+    order.
+    """
+    counts = _require_counts(state)
+    if k < 0:
+        raise ValueError(f"finalize_topk needs k >= 0, got {k}")
+    kept = _topk_kept(state.first_pos, counts, int(k))
+    table, sizes = _capped_table(state.first_pos, kept)
+    return Vocabulary(table=table, sizes=sizes)
+
+
+def finalize_min_count(state: VocabState, min_count: int) -> Vocabulary:
+    """Frequency-capped finalize: keep values seen at least ``min_count``
+    times; everything else maps to the OOV ordinal ``sizes[c]``.
+
+    Kept values get dense ordinals in appearing-sequence order, exactly
+    like :func:`finalize` restricted to the kept set. Requires a
+    count-tracking state. Deterministic under any merge order (counts
+    sum; first positions min — both commutative monoids).
+    """
+    counts = _require_counts(state)
+    if min_count < 1:
+        raise ValueError(f"finalize_min_count needs min_count >= 1, got {min_count}")
+    kept = (state.first_pos < NEVER) & (counts >= jnp.int32(min_count))
+    table, sizes = _capped_table(state.first_pos, kept)
     return Vocabulary(table=table, sizes=sizes)
 
 

@@ -90,9 +90,16 @@ def _fused_decode_genvocab_kernel(
 
     # Branch-free scatter triple per byte lane. Dead lanes (non-delimiter,
     # label/dense fields, truncated or overflow rows) carry pos = NEVER —
-    # min's identity — so the RMW below is unconditional.
+    # min's identity — so the RMW below is unconditional. Position
+    # arithmetic runs in uint32 saturated at NEVER (vocab.positions'
+    # convention): offsets near the int32 ceiling drop rows instead of
+    # wrapping negative or aliasing the sentinel.
     is_vocab = (isdelim == 1) & (col >= hex_start) & (row < n_rows)
-    pos = jnp.where(is_vocab, row_offset + row, vocab_lib.NEVER)
+    pos_sat = jnp.minimum(
+        row_offset.astype(jnp.uint32) + row.astype(jnp.uint32),
+        jnp.uint32(vocab_lib.NEVER),
+    ).astype(jnp.int32)
+    pos = jnp.where(is_vocab, pos_sat, vocab_lib.NEVER)
     c = jnp.clip(col - hex_start, 0, n_cols - 1)
     u = jax.lax.bitcast_convert_type(value, jnp.uint32)
     v = (u % jnp.uint32(vocab_range)).astype(jnp.int32)

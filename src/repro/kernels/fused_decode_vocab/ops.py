@@ -12,10 +12,11 @@ residency budget).
     Modulus → scatter-min, the byte tile and the state both on-chip.
     The only HBM traffic is the byte read.
 
-  * **HBM tier / degenerate shapes** — the state cannot stay on-chip, so
-    the chunk decodes through the reference scan and the decoded matrix
-    takes the existing tier-routed ``fused_vocab`` chain (which itself
-    falls back to the XLA modulus + scatter-min oracle there) — shared
+  * **hbm_slab / xla_fallback tiers, tracked counts, degenerate
+    shapes** — no bytes-in kernel: the chunk decodes through the
+    reference scan and the decoded matrix takes the existing tier-routed
+    ``fused_vocab`` chain (the slab-streaming kernel on ``hbm_slab``,
+    the XLA modulus + scatter-min oracle on the fallback) — shared
     implementations, not copies; ``ref.py`` stays the standalone oracle.
 
 Both tiers are **bit-identical** to decode → ``positive_modulus`` →
@@ -35,7 +36,10 @@ from repro.kernels.fused_vocab import ops as fv_ops
 
 def fused_decode_vocab_tier(n_cols: int, vocab_range: int) -> str:
     """Which tier the bytes-in loop-① dispatch picks — the state residency
-    condition is identical to the decoded-input fused kernel's."""
+    condition is identical to the decoded-input fused kernel's. Only the
+    ``"vmem"`` tier has a bytes-in kernel; ``"hbm_slab"`` /
+    ``"xla_fallback"`` route through the reference decode + the
+    tier-routed decoded-input chain."""
     return fv_ops.fused_vocab_tier(n_cols, vocab_range)
 
 
@@ -70,13 +74,19 @@ def fused_decode_update(
     n_cols = n_fields - hex_start
     vocab_range = int(state.first_pos.shape[1])
     n = int(byte_buf.shape[0])
+    # conservative host-side ceiling guard (rows ≤ max_rows per chunk);
+    # traced offsets rely on the kernel's saturating position arithmetic
+    vocab_lib.check_row_ceiling(state.rows_seen, max_rows)
     if (
         n_cols <= 0
         or n == 0
-        or fused_decode_vocab_tier(n_cols, vocab_range) == "hbm"
+        or state.counts is not None
+        or fused_decode_vocab_tier(n_cols, vocab_range) != "vmem"
     ):
-        # HBM tier / no vocab columns: reference decode + the tier-routed
-        # decoded-input chain (itself the XLA oracle on HBM).
+        # Over-budget state / tracked counts (the bytes-in kernel carries
+        # no count plane) / no vocab columns: reference decode + the
+        # tier-routed decoded-input chain (the slab kernel on hbm_slab,
+        # the XLA oracle on the fallback tier).
         from repro.kernels.decode_utf8 import ref as decode_ref
 
         _, _, sparse, valid = decode_ref.decode_bytes(
@@ -117,8 +127,13 @@ def fused_decode_update(
     )
     field_col = hex_start + jnp.arange(n_cols, dtype=jnp.int32)
     r_miss = jnp.maximum((n_delims - field_col + n_fields - 1) // n_fields, 0)
-    fill = jnp.where(r_miss < n_cap, offset + r_miss, vocab_lib.NEVER)
+    fill_sat = jnp.minimum(
+        offset.astype(jnp.uint32) + r_miss.astype(jnp.uint32),
+        jnp.uint32(vocab_lib.NEVER),
+    ).astype(jnp.int32)
+    fill = jnp.where(r_miss < n_cap, fill_sat, vocab_lib.NEVER)
     first_pos = first_pos.at[:, 0].min(fill)
     return vocab_lib.VocabState(
-        first_pos=first_pos, rows_seen=state.rows_seen + n_cap
+        first_pos=first_pos,
+        rows_seen=vocab_lib.advance_rows_seen(state.rows_seen, n_cap),
     )

@@ -24,9 +24,27 @@ collapses the chain:
     result is nevertheless order-independent (min is commutative), so
     it is bit-identical to the vectorized XLA scatter-min oracle.
 
-HBM tier (state stack over the residency budget) — there is no kernel:
-the modulus and scatter-min fall back to the XLA oracle (ops.py), the
-same many-outstanding-writes pattern ``vocab.update`` already uses for
+``fused_genvocab_slab_kernel`` (HBM-slab tier)
+    The same chain for state stacks that exceed the VMEM residency
+    budget. ``first_pos`` (and the optional occurrence-count plane)
+    lives in HBM partitioned into ``[n_cols, slab_range]`` **slabs**;
+    the grid is ``(n_slabs, n_row_tiles)`` with the slab index
+    outermost, so for each slab the whole chunk streams through while
+    that slab's block — a constant index map *over the inner row-tile
+    dim* plus an input/output alias, generalizing the VMEM kernel's
+    grid-carry machinery — stays resident in VMEM and is written back
+    to HBM exactly once when the grid advances to the next slab. The
+    Pallas pipeline double-buffers the slab DMAs against compute. Lanes
+    whose modded value falls outside the current slab redirect to local
+    index 0 with position ``NEVER`` (min's identity) and count
+    increment 0 — branch-free no-ops — so the serial II=2 RMW loop
+    needs no per-lane conditionals and loop ① stays ONE fused dispatch
+    at ANY ``vocab_range``.
+
+XLA-fallback tier (degenerate widths where not even one 128-lane slab
+per column fits the slab budget) — there is no kernel: the modulus and
+scatter-min fall back to the XLA oracle (ops.py), the same
+many-outstanding-writes pattern ``vocab.update`` already uses for
 HBM-resident state. Identical results — property-tested.
 
 Like every kernel package here, the kernels run ``interpret=True`` on
@@ -49,6 +67,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core import vocab as vocab_lib
 
 
 def _modulus(sparse_tile: jnp.ndarray, vocab_range: int) -> jnp.ndarray:
@@ -130,3 +150,142 @@ def fused_genvocab(
         input_output_aliases={2: 0},
         interpret=interpret,
     )(sparse, pos_tiles, state)
+
+
+def _fused_genvocab_slab_kernel(
+    *refs, vocab_range: int, slab_range: int, track_counts: bool
+):
+    # grid = (n_slabs, n_row_tiles), slab index outermost: for a fixed
+    # slab the row-tile dim iterates innermost, so the slab's state (and
+    # count) block — index map constant over that inner dim — stays
+    # resident in VMEM across the whole chunk and is written back to HBM
+    # once, when the slab index advances.
+    if track_counts:
+        (sparse_ref, pos_ref, state_in_ref, counts_in_ref,
+         state_ref, counts_ref) = refs
+    else:
+        sparse_ref, pos_ref, state_in_ref, state_ref = refs
+        counts_in_ref = counts_ref = None
+    slab = pl.program_id(0)
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():  # first row tile of this slab: seed from the HBM block
+        state_ref[...] = state_in_ref[...]
+        if track_counts:
+            counts_ref[...] = counts_in_ref[...]
+
+    # Modulus by the TRUE vocab_range (the state may be padded to a slab
+    # multiple; the pad region only ever sees the no-op lanes below).
+    modded = _modulus(sparse_ref[...], vocab_range)
+    local = modded - slab * slab_range
+    in_slab = (local >= 0) & (local < slab_range)
+    # Branch-free: out-of-slab lanes redirect to local index 0 with
+    # pos = NEVER (min's identity) and count increment 0.
+    idx = jnp.where(in_slab, local, 0)
+    never = jnp.int32(vocab_lib.NEVER)
+    n_rows, n_cols = sparse_ref.shape
+
+    def row_body(i, _):
+        p = pos_ref[0, i]
+
+        def col_body(c, _):
+            v = idx[i, c]
+            hit = in_slab[i, c]
+            cur = state_ref[c, v]
+            state_ref[c, v] = jnp.minimum(
+                cur, jnp.where(hit, p, never)
+            )  # the FPGA's II=2 RMW, streamed slab by slab
+            if track_counts:
+                # p == NEVER marks padding/invalid/past-ceiling rows —
+                # they drop from the counts exactly as from the state.
+                inc = jnp.where(hit & (p != never), 1, 0)
+                counts_ref[c, v] = counts_ref[c, v] + inc
+            return 0
+
+        return jax.lax.fori_loop(0, n_cols, col_body, 0)
+
+    jax.lax.fori_loop(0, n_rows, row_body, 0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("slab_range", "vocab_range", "row_block", "interpret"),
+    donate_argnums=(0, 1),
+)
+def fused_genvocab_slabs(
+    state: jnp.ndarray,
+    counts: jnp.ndarray | None,
+    sparse: jnp.ndarray,
+    pos_tiles: jnp.ndarray,
+    *,
+    slab_range: int,
+    vocab_range: int,
+    row_block: int = 256,
+    interpret: bool = True,
+):
+    """Whole loop-① chain at any ``vocab_range`` — ONE dispatch, the
+    HBM-resident state streamed through VMEM slab by slab.
+
+    state     int32 [n_cols, padded_range] — first_pos, padded to a
+              ``slab_range`` multiple (pad entries NEVER; ops.py slices)
+    counts    int32 [n_cols, padded_range] occurrence counts, or None
+    sparse    int32 [rows, n_cols] (raw hash bitcasts, pre-modulus)
+    pos_tiles int32 [rows // row_block, row_block] global positions
+              (``vocab.NEVER`` for padding/invalid rows)
+    vocab_range — the TRUE modulus range (≤ padded_range)
+    → (updated first_pos, updated counts | None), same padded shapes.
+
+    ``state`` (and ``counts``) are donated-into: each slab block is
+    aliased input→output, the same in-place convention as
+    :func:`fused_genvocab`.
+    """
+    n_cols, padded_range = state.shape
+    if padded_range % slab_range:
+        raise ValueError(
+            f"state width ({padded_range}) must divide by slab_range "
+            f"({slab_range}); ops.py pads"
+        )
+    if not 0 < vocab_range <= padded_range:
+        raise ValueError(f"vocab_range {vocab_range} vs padded {padded_range}")
+    n_slabs = padded_range // slab_range
+    rows = sparse.shape[0]
+    if rows % row_block:
+        raise ValueError(f"rows ({rows}) must divide by row_block ({row_block})")
+    if pos_tiles.shape != (rows // row_block, row_block):
+        raise ValueError(
+            f"pos_tiles shape {pos_tiles.shape} != {(rows // row_block, row_block)}"
+        )
+    track_counts = counts is not None
+    slab_spec = pl.BlockSpec((n_cols, slab_range), lambda s, r: (0, s))
+    in_specs = [
+        pl.BlockSpec((row_block, n_cols), lambda s, r: (r, 0)),
+        pl.BlockSpec((1, row_block), lambda s, r: (r, 0)),
+        slab_spec,
+    ]
+    out_shape = [jax.ShapeDtypeStruct((n_cols, padded_range), jnp.int32)]
+    operands = [sparse, pos_tiles, state]
+    aliases = {2: 0}
+    if track_counts:
+        in_specs.append(slab_spec)
+        out_shape.append(
+            jax.ShapeDtypeStruct((n_cols, padded_range), jnp.int32)
+        )
+        operands.append(counts)
+        aliases[3] = 1
+    out = pl.pallas_call(
+        functools.partial(
+            _fused_genvocab_slab_kernel,
+            vocab_range=vocab_range,
+            slab_range=slab_range,
+            track_counts=track_counts,
+        ),
+        grid=(n_slabs, rows // row_block),
+        in_specs=in_specs,
+        out_specs=[slab_spec] * len(out_shape),
+        out_shape=out_shape,
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(*operands)
+    if track_counts:
+        return out[0], out[1]
+    return out[0], None

@@ -39,12 +39,27 @@ def genvocab_update(
     vectorized scatter-min oracle (identical results — property-tested).
     """
     rows = modded.shape[0]
-    pos = state.rows_seen + jnp.arange(rows, dtype=jnp.int32)
-    pos = jnp.where(valid, pos, vocab_lib.NEVER)
+    vocab_lib.check_row_ceiling(state.rows_seen, rows)
+    # overflow-safe positions: saturate at NEVER past the int32 ceiling
+    pos = vocab_lib.positions(state.rows_seen, rows, valid)
     vals_t = modded.T
     if state.first_pos.shape[1] <= vocab_lib.VMEM_TIER_MAX:
         first_pos = kernel.genvocab(state.first_pos, vals_t, pos)
     else:
         first_pos = ref.genvocab(state.first_pos, vals_t, pos)
-    rows_seen = state.rows_seen + jnp.sum(valid.astype(jnp.int32))
-    return vocab_lib.VocabState(first_pos=first_pos, rows_seen=rows_seen)
+    rows_seen = vocab_lib.advance_rows_seen(
+        state.rows_seen, jnp.sum(valid.astype(jnp.int32))
+    )
+    counts = state.counts
+    if counts is not None:
+        # the per-column kernel carries no count plane — accumulate via
+        # the same scatter-add the oracle uses (bit-identical)
+        cols = jnp.arange(modded.shape[1], dtype=jnp.int32)[None, :]
+        bcols = jnp.broadcast_to(cols, modded.shape)
+        inc = (pos < vocab_lib.NEVER).astype(jnp.int32)
+        counts = counts.at[bcols, modded].add(
+            jnp.broadcast_to(inc[:, None], modded.shape)
+        )
+    return vocab_lib.VocabState(
+        first_pos=first_pos, rows_seen=rows_seen, counts=counts
+    )

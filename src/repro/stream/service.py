@@ -93,6 +93,16 @@ class StreamingPreprocessService:
         histograms, recompile counter — ONE ``registry.snapshot()`` is
         the full service view). Default: a private registry per service,
         so concurrent services never mix numbers.
+      finalizer: how the service turns the merged state into the serving
+        :class:`~repro.core.vocab.Vocabulary` — default
+        ``vocab.finalize`` (every occurring value gets an ordinal). Pass
+        a frequency-capped finalizer to bound the serving table, e.g.
+        ``lambda st: vocab.finalize_topk(st, 10_000)`` or
+        ``functools.partial(vocab.finalize_min_count, min_count=5)``
+        (both need a state built with ``track_counts=True`` /
+        ``PipelineConfig.track_vocab_counts``). Applied at construction
+        and after every refresh merge, so the swap path re-caps
+        deterministically regardless of delta arrival order.
     """
 
     def __init__(
@@ -104,13 +114,15 @@ class StreamingPreprocessService:
         queue_depth: int = 64,
         poll_s: float = 0.005,
         registry: obs.Registry | None = None,
+        finalizer=vocab_lib.finalize,
     ):
         self.config = config
         self._state = vocab_state
+        self._finalizer = finalizer
         self.registry = registry if registry is not None else obs.Registry()
         self.scheduler = scheduler_lib.MicroBatchScheduler(
             config,
-            vocab_lib.finalize(vocab_state),
+            finalizer(vocab_state),
             bucket_rows=bucket_rows,
             bytes_per_row=bytes_per_row,
             registry=self.registry,
@@ -126,6 +138,12 @@ class StreamingPreprocessService:
             raise ValueError(
                 f"vocab_state shape {got} does not match the plan's vocab "
                 f"layout {want}; build loop ① with the same PipelineConfig.plan"
+            )
+        if (vocab_state.counts is not None) != compiled.track_counts:
+            raise ValueError(
+                "vocab_state count tracking does not match "
+                f"PipelineConfig.track_vocab_counts={compiled.track_counts}; "
+                "build loop ① with the same config"
             )
         # Loop-① ingestion engine for absorb(): executes the SAME compiled
         # plan's vocab half as the offline engines — including the fused
@@ -337,7 +355,13 @@ class StreamingPreprocessService:
         applies them **between micro-batch steps** — finalize, then one
         atomic swap across all bucket transforms. In-flight steps keep
         the old table; no step ever mixes the two.
+
+        An incompatible delta (different vocab layout or dtype, or
+        counts-tracking mismatch) raises :class:`ValueError` here, at
+        ingestion — not later inside the service loop, where the failure
+        would take every in-flight request down with it.
         """
+        vocab_lib.check_compatible(self._state, delta_state)
         with self._vocab_lock:
             if self._pending_delta is None:
                 self._pending_delta = delta_state
@@ -386,6 +410,12 @@ class StreamingPreprocessService:
                     row_offset = int(self._state.rows_seen) + (
                         int(pending.rows_seen) if pending is not None else 0
                     )
+            if row_offset + req.n_rows > vocab_lib.MAX_ROWS:
+                raise OverflowError(
+                    f"absorb would exceed the int32 position ceiling: "
+                    f"row offset {row_offset} + {req.n_rows} rows > "
+                    f"{vocab_lib.MAX_ROWS}"
+                )
             if cfg.input_format == "utf8":
                 chunk = np.zeros(cfg.chunk_bytes, np.uint8)
                 chunk[: req.n_bytes] = req.payload
@@ -402,16 +432,20 @@ class StreamingPreprocessService:
                     chunk[k][: req.n_rows] = req.payload[k]
             base = self._ingest.init_state()
             base = vocab_lib.VocabState(
-                first_pos=base.first_pos, rows_seen=jnp.int32(row_offset)
+                first_pos=base.first_pos,
+                rows_seen=jnp.int32(row_offset),
+                counts=base.counts,
             )
             with obs.span("loop1/absorb", **self._ingest._vocab_span_labels):
                 st = self._ingest_step(base, jax.tree.map(jnp.asarray, chunk))
             self._c_absorb.add(1)
             # the delta carries only ITS valid-row count: merge() sums
-            # rows_seen, so the offset must not be double-counted
+            # rows_seen, so the offset must not be double-counted (counts
+            # started from zero, so they already are the delta's own)
             delta = vocab_lib.VocabState(
                 first_pos=st.first_pos,
                 rows_seen=st.rows_seen - jnp.int32(row_offset),
+                counts=st.counts,
             )
             self.refresh_vocab(delta)
 
@@ -538,7 +572,7 @@ class StreamingPreprocessService:
             with obs.span("vocab/merge", cat="vocab"):
                 self._state = merged = vocab_lib.merge(self._state, delta)
         with obs.span("vocab/swap", cat="vocab"):
-            self.scheduler.swap_vocabulary(vocab_lib.finalize(merged))
+            self.scheduler.swap_vocabulary(self._finalizer(merged))
         self._c_apply.add(1)
         obs.instant("vocab/applied", cat="vocab")
 

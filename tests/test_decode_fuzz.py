@@ -363,7 +363,7 @@ def test_engine_hbm_tier_falls_back():
     schema = schema_lib.TableSchema(n_dense=2, n_sparse=2, vocab_range=1_000_000)
     buf = _hostile_chunk(9, 2, 2, 10, 0)
     pipe_f, pipe_u = _engine(True, schema), _engine(False, schema)
-    assert pipe_f.compiled.decode_vocab_route == "bytes/hbm"
+    assert pipe_f.compiled.decode_vocab_route == "bytes/hbm_slab"
     assert pipe_f.compiled.decode_xform_route(32) == "bytes/hbm"
     v_f = pipe_f.build_vocab_stream([buf])
     v_u = pipe_u.build_vocab_stream([buf])

@@ -121,7 +121,7 @@ def test_fused_chunk_carry_property(seed, n_chunks):
     [
         (5000, "vmem"),
         (vocab_lib.VMEM_TIER_MAX, "vmem"),
-        (vocab_lib.VMEM_TIER_MAX + 1, "hbm"),
+        (vocab_lib.VMEM_TIER_MAX + 1, "hbm_slab"),
     ],
     ids=["paper-5k", "tier-max", "tier-max+1"],
 )
@@ -143,12 +143,12 @@ def test_fused_matches_update_both_tiers(vocab_range, tier):
 
 def test_fused_state_budget_routes_to_hbm():
     """A state stack under the per-column cutoff but over the whole-stack
-    VMEM budget must route to the HBM tier (the fused kernel keeps ALL
-    column states resident, unlike the one-column-at-a-time genvocab
+    VMEM budget must route to the hbm_slab tier (the fused kernel keeps
+    ALL column states resident, unlike the one-column-at-a-time genvocab
     kernel)."""
     vocab_range = vocab_lib.VMEM_TIER_MAX  # per-column: fits
     n_over = fv_ops.FUSED_STATE_VMEM_BYTES // (vocab_range * 4) + 1
-    assert fv_ops.fused_vocab_tier(n_over, vocab_range) == "hbm"
+    assert fv_ops.fused_vocab_tier(n_over, vocab_range) == "hbm_slab"
     assert fv_ops.fused_vocab_tier(1, vocab_range) == "vmem"
 
 
