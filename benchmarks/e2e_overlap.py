@@ -1,0 +1,276 @@
+"""End-to-end stalls-vs-overlap: preprocessing-fed DLRM training.
+
+The measurement the repro was missing (ISSUE 9): the paper's premise is
+that preprocessing stalls the *training* accelerator, so the number that
+matters is the input-stall fraction of the training loop, not
+preprocessing throughput in isolation. This benchmark drives real DLRM
+steps from the streaming service through
+:class:`repro.train.input_pipeline.TrainInputPipeline` and compares:
+
+  * **overlap off vs on** — same service, same payload sequence, same
+    initial weights; only the bridge's staging mode differs. Reported as
+    each run's ``input_wait`` fraction (the exhaustive
+    input_wait/train_step stall split), asserted strictly lower with
+    overlap on — at **bit-identical final weights** (asserted: batches
+    are fixed consecutive row slices of the stream, so overlap cannot
+    reorder a single example).
+  * **cache cold vs warm** — a skewed multi-epoch re-read sequence
+    against a :class:`repro.data.chunk_cache.ChunkCache`-fronted
+    service: epoch 1 dispatches every unique chunk, epoch 2 is all hits.
+    Asserted ≥ 2× faster warm, with the hit/miss counters exported from
+    the cache's obs registry. A third training run on the warm cache
+    re-asserts bit-identical weights (a hit is the same bytes).
+
+Dumps ``BENCH_e2e.json`` (provenance + breakdown + assert outcomes) and
+emits the usual CSV rows.
+
+    PYTHONPATH=src python benchmarks/e2e_overlap.py [--steps 32]
+                                                    [--json-out BENCH_e2e.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+if __package__ in (None, ""):  # direct script invocation
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+    sys.path.insert(0, _ROOT)
+
+import jax
+import numpy as np
+
+from repro import obs
+from repro.core import pipeline as P, schema as schema_lib
+from repro.data import chunk_cache as chunk_cache_lib
+from repro.data import synth
+from repro.models import dlrm
+from repro.stream import StreamingPreprocessService
+from repro.train import input_pipeline as input_lib
+from repro.train import optimizer as opt_lib
+from repro.train import steps as steps_lib
+from benchmarks.common import RECORDS, emit, provenance
+
+PAYLOAD_ROWS = 256          # rows per raw payload == rows per train batch
+BATCH_ROWS = 256
+VOCAB_RANGE = 1_000
+# Skewed per-epoch re-read sequence over 9 distinct payloads (payload 0
+# is the hot chunk): 16 draws → 4096 rows → 16 train batches per epoch.
+SEQ = (0, 1, 0, 2, 0, 1, 3, 0, 4, 1, 5, 0, 6, 2, 7, 8)
+N_DISTINCT = 9
+STEPS_PER_EPOCH = len(SEQ) * PAYLOAD_ROWS // BATCH_ROWS
+
+
+def params_digest(params) -> str:
+    """sha256 over every leaf's bytes — the bit-identity witness."""
+    h = hashlib.sha256()
+    for leaf in jax.tree.leaves(params):
+        h.update(np.ascontiguousarray(np.asarray(leaf)).tobytes())
+    return h.hexdigest()
+
+
+def build_world():
+    """(config, vocab_state, payloads, warm_payload, model cfg, step fn).
+
+    One extra payload (index 9) exists only to warm the service's bucket
+    compile — its content is disjoint from SEQ so warming never seeds
+    the cache with a key the measured runs could hit."""
+    schema = schema_lib.TableSchema(vocab_range=VOCAB_RANGE)
+    rows = (N_DISTINCT + 1) * PAYLOAD_ROWS
+    buf, table = synth.make_dataset(synth.SynthConfig(schema=schema, rows=rows, seed=0))
+    config = P.PipelineConfig(
+        schema=schema,
+        chunk_bytes=1 << 16,
+        max_rows_per_chunk=PAYLOAD_ROWS,
+        input_format="utf8",
+    )
+    pipe = P.PiperPipeline(config)
+    # frozen vocabulary over the whole dataset: no mid-run refresh, so
+    # the cache's vocab digest is stable across epochs
+    state = pipe.build_state_stream(synth.chunk_stream(buf, 1 << 16))
+    payloads = list(
+        synth.request_payloads(buf, table, [PAYLOAD_ROWS] * (N_DISTINCT + 1))
+    )
+    return config, state, payloads[:N_DISTINCT], payloads[N_DISTINCT]
+
+
+def make_service(config, state, cache=None):
+    svc = StreamingPreprocessService(
+        config,
+        state,
+        bucket_rows=(PAYLOAD_ROWS,),  # one bucket → one compile, no
+        # coalescing ambiguity: every miss dispatches the same shape
+        cache=cache,
+    ).start()
+    return svc
+
+
+def train_run(service, mcfg, ocfg, jit_step, *, overlap: bool, n_steps: int, payloads):
+    """One training run; returns (digest, losses, stall report, wall_s).
+
+    Re-inits from the same PRNG key each call (donated buffers forbid
+    reusing a params tree across runs), and syncs the loss every step so
+    the bridge's ``train_step`` bucket honestly includes device compute."""
+    pipe_in = input_lib.TrainInputPipeline(
+        service,
+        lambda: (payloads[i] for i in SEQ),
+        batch_rows=BATCH_ROWS,
+        n_steps=n_steps,
+        overlap=overlap,
+    )
+    params = dlrm.init(jax.random.PRNGKey(0), mcfg)
+    opt_state = opt_lib.adamw_init(params)
+    losses = []
+    t0 = time.perf_counter()
+    for batch in pipe_in:
+        params, opt_state, metrics = jit_step(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+    jax.block_until_ready(params)
+    wall = time.perf_counter() - t0
+    return params_digest(params), losses, pipe_in.stall_report(), wall
+
+
+def time_epoch(service, payloads) -> float:
+    """Seconds to preprocess one SEQ epoch, submitted sequentially (each
+    repeat of an already-completed payload can hit the cache — the
+    latency view of the skewed re-read workload)."""
+    t0 = time.perf_counter()
+    for i in SEQ:
+        service.submit(payloads[i]).result(timeout=120)
+    return time.perf_counter() - t0
+
+
+def main(json_out: str | None = "BENCH_e2e.json", steps: int | None = None) -> dict:
+    mark = len(RECORDS)
+    n_steps = steps if steps else 2 * STEPS_PER_EPOCH
+    config, state, payloads, warm_payload = build_world()
+    schema = config.schema
+    mcfg = dlrm.DLRMConfig(
+        n_dense=schema.n_dense,
+        n_sparse=schema.n_sparse,
+        vocab_range=VOCAB_RANGE,
+        embed_dim=16,
+        bottom_mlp=(64, 16),
+        top_mlp=(64, 1),
+    )
+    ocfg = opt_lib.AdamWConfig(
+        schedule=opt_lib.cosine_schedule(2e-3, 5, n_steps), weight_decay=0.0
+    )
+    jit_step = jax.jit(
+        steps_lib.make_tabular_train_step(dlrm.loss, ocfg),
+        donate_argnums=(0, 1),
+    )
+
+    # ---- overlap off vs on (no cache) -------------------------------- #
+    svc = make_service(config, state)
+    try:
+        svc.warmup([warm_payload])
+        # pre-compile the train step on a REAL preprocessed batch (same
+        # shapes/dtypes the runs will see) with throwaway params, so
+        # neither measured run pays — or attributes — the jit compile
+        dummy = svc.submit(warm_payload).result(timeout=120)
+        p0 = dlrm.init(jax.random.PRNGKey(0), mcfg)
+        jax.block_until_ready(jit_step(p0, opt_lib.adamw_init(p0), dummy))
+        dig_off, losses_off, stall_off, wall_off = train_run(
+            svc, mcfg, ocfg, jit_step, overlap=False, n_steps=n_steps, payloads=payloads
+        )
+        dig_on, losses_on, stall_on, wall_on = train_run(
+            svc, mcfg, ocfg, jit_step, overlap=True, n_steps=n_steps, payloads=payloads
+        )
+    finally:
+        svc.stop()
+    frac_off = stall_off["fractions"]["input_wait"]
+    frac_on = stall_on["fractions"]["input_wait"]
+    emit(
+        "e2e/overlap_off",
+        wall_off,
+        f"input_frac={frac_off};steps={n_steps};rows_per_s={n_steps*BATCH_ROWS/wall_off:.0f}",
+    )
+    emit(
+        "e2e/overlap_on",
+        wall_on,
+        f"input_frac={frac_on};steps={n_steps};rows_per_s={n_steps*BATCH_ROWS/wall_on:.0f}",
+    )
+
+    # ---- cache cold vs warm (skewed re-read) ------------------------- #
+    cache = chunk_cache_lib.ChunkCache(capacity_bytes=64 << 20)
+    svc_c = make_service(config, state, cache=cache)
+    try:
+        svc_c.warmup([warm_payload])
+        cold_s = time_epoch(svc_c, payloads)  # unique chunks all dispatch
+        warm_s = time_epoch(svc_c, payloads)  # every submit is a hit
+        # third training run, warm cache: hits must not move a weight
+        dig_cache, _, stall_cache, wall_cache = train_run(
+            svc_c, mcfg, ocfg, jit_step, overlap=False, n_steps=n_steps, payloads=payloads
+        )
+    finally:
+        svc_c.stop()
+    stats = cache.stats()
+    emit("e2e/cache_cold_epoch", cold_s, f"requests={len(SEQ)}")
+    emit(
+        "e2e/cache_warm_epoch",
+        warm_s,
+        f"requests={len(SEQ)};speedup_vs_cold={cold_s/warm_s:.1f}x;"
+        f"hits={stats['hits_total']};misses={stats['misses_total']}",
+    )
+    emit("e2e/cached_train", wall_cache, f"input_frac={stall_cache['fractions']['input_wait']}")
+
+    # ---- acceptance asserts ------------------------------------------ #
+    assert dig_on == dig_off, (
+        f"overlap changed trained weights: {dig_off[:16]} vs {dig_on[:16]}"
+    )
+    assert dig_cache == dig_off, (
+        f"cache hits changed trained weights: {dig_off[:16]} vs {dig_cache[:16]}"
+    )
+    assert np.allclose(losses_off, losses_on), "per-step losses diverged"
+    assert frac_on < frac_off, (
+        f"input-stall fraction did not drop with overlap: off={frac_off} on={frac_on}"
+    )
+    assert warm_s * 2.0 <= cold_s, (
+        f"warm epoch not ≥2× faster: cold={cold_s:.4f}s warm={warm_s:.4f}s"
+    )
+    print(
+        f"# overlap: input_frac {frac_off:.3f} → {frac_on:.3f}; "
+        f"cache: {cold_s:.3f}s cold → {warm_s:.3f}s warm "
+        f"({cold_s/warm_s:.1f}x); weights identical ({dig_off[:16]})"
+    )
+
+    result = {
+        "provenance": provenance(),
+        "steps": n_steps,
+        "batch_rows": BATCH_ROWS,
+        "overlap": {
+            "off": {"wall_s": round(wall_off, 6), "stall": stall_off},
+            "on": {"wall_s": round(wall_on, 6), "stall": stall_on},
+            "input_frac_off": frac_off,
+            "input_frac_on": frac_on,
+        },
+        "cache": {
+            "cold_epoch_s": round(cold_s, 6),
+            "warm_epoch_s": round(warm_s, 6),
+            "speedup": round(cold_s / warm_s, 2),
+            "stats": stats,
+            "cached_train": {"wall_s": round(wall_cache, 6), "stall": stall_cache},
+        },
+        "identical_weights": True,
+        "params_digest": dig_off,
+        "records": RECORDS[mark:],
+    }
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"# wrote {json_out}")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=None, help="total train steps")
+    ap.add_argument("--json-out", default="BENCH_e2e.json")
+    args = ap.parse_args()
+    main(json_out=args.json_out, steps=args.steps)

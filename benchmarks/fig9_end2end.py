@@ -3,34 +3,56 @@
 CPU row-wise baseline (best thread count) vs the PIPER columnar engine
 in streaming ("network") mode and one-shot ("local") mode, for UTF-8 and
 binary inputs at both vocabulary tiers — the four panels of Figure 9.
+
+Every row lands in ``benchmarks.common.RECORDS``; run standalone with
+``--json-out BENCH_fig9.json`` (default) for the machine-readable dump
+(provenance + rows), or through ``benchmarks/run.py`` which slices the
+same ledger into its per-section JSON. The training-side end-to-end
+picture (stall-vs-overlap, chunk cache) lives in the companion
+``benchmarks/e2e_overlap.py`` / ``BENCH_e2e.json``.
 """
 
 from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+if __package__ in (None, ""):  # direct script invocation
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+    sys.path.insert(0, _ROOT)
 
 import jax.numpy as jnp
 
 from repro.core import baseline, pipeline as P, schema as schema_lib
 from repro.data import synth
-from benchmarks.common import emit, time_fn, time_host
+from benchmarks.common import RECORDS, emit, provenance, time_fn, time_host
 
 ROWS = 6_000
 CHUNK = 1 << 17
 
 
-def main() -> None:
+def main(json_out: str | None = None) -> None:
+    mark = len(RECORDS)
     for vocab_range, tag in ((5_000, "5k"), (1_000_000, "1m")):
         schema = schema_lib.TableSchema(vocab_range=vocab_range)
         scfg = synth.SynthConfig(schema=schema, rows=ROWS, seed=0)
         buf, table = synth.make_dataset(scfg)
 
         for fmt, binary in (("utf8", False), ("binary", True)):
+            # best-of-3 per thread count: the row-wise baseline is too
+            # slow for a long steady-state median, and min is the least
+            # interference-biased single-shot statistic (see time_host)
             cpu_sec = min(
                 time_host(
                     lambda t=t: baseline.run_pipeline(
                         buf, schema, n_threads=t,
                         binary_input=table if binary else None,
                     ),
-                    iters=1,
+                    iters=3,
+                    reduce="min",
                 )
                 for t in (1, 4)
             )
@@ -67,6 +89,22 @@ def main() -> None:
                     f"rows_per_s={ROWS/sec:.0f};speedup_vs_cpu={cpu_sec/sec:.1f}x",
                 )
 
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(
+                {"provenance": provenance(), "records": RECORDS[mark:]},
+                f,
+                indent=2,
+            )
+        print(f"# wrote {json_out} ({len(RECORDS) - mark} rows)")
+
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--json-out",
+        default="BENCH_fig9.json",
+        help="machine-readable dump path ('' disables)",
+    )
+    args = ap.parse_args()
+    main(json_out=args.json_out)

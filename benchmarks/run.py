@@ -25,6 +25,7 @@ import traceback
 
 from benchmarks import (
     common,
+    e2e_overlap,
     fig8_cpu_scaling,
     fig9_end2end,
     fig10_breakdown,
@@ -59,12 +60,15 @@ SECTIONS = {
     "decode": fused_decode.main,
     # compiled-plan vs legacy loop-② throughput + a crossed-feature plan
     "plan": plan_bench.main,
+    # stalls-vs-overlap + chunk-cache cold/warm over real DLRM training;
+    # the CI e2e job dumps it as BENCH_e2e.json via the standalone CLI
+    "e2e": lambda: e2e_overlap.main(json_out=None),
 }
 
-# Sections that force multi-device XLA state and would perturb the
-# single-device sections in the same process: run only when --only names
-# them explicitly.
-OPT_IN = {"fig8_sharded"}
+# Sections that would perturb the others in the same process (multi-
+# device XLA state; background service threads + a full training loop):
+# run only when --only names them explicitly.
+OPT_IN = {"fig8_sharded", "e2e"}
 
 
 def main() -> None:

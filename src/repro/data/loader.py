@@ -193,6 +193,8 @@ class Prefetcher:
     """
 
     def __init__(self, batch_fn: Callable[[int], dict], depth: int = 2):
+        if depth < 1:
+            raise ValueError(f"prefetch depth must be >= 1, got {depth}")
         self.batch_fn = batch_fn
         self.depth = depth
         self._q: queue.Queue = queue.Queue(maxsize=depth)
@@ -254,3 +256,33 @@ class Prefetcher:
         t, self._thread = self._thread, None
         if t is not None:
             t.join(timeout=1.0)
+
+
+class DevicePrefetcher(Prefetcher):
+    """Depth-N *device-side* prefetch: a :class:`Prefetcher` whose
+    producer thread also stages each batch onto the accelerator with
+    ``jax.device_put`` before enqueueing it.
+
+    ``device_put`` is an async transfer, so batch *i+1* uploads while the
+    donated train step for batch *i* runs — the consumer's :meth:`get`
+    returns device-resident arrays and the training hot path never
+    touches host memory (the overlapped-input contract of
+    ``repro.train.input_pipeline``). ``depth`` bounds how many staged
+    batches may wait on device at once, i.e. the device-memory budget of
+    the overlap.
+
+    Inherits the Prefetcher contract unchanged: in-order ``(step, batch)``
+    pairs, ``batch_fn`` exceptions re-raised from ``get()``, idempotent
+    ``stop()`` (tests/test_data.py).
+    """
+
+    def __init__(
+        self, batch_fn: Callable[[int], dict], depth: int = 2, device=None
+    ):
+        import jax
+
+        def staged(step: int) -> dict:
+            return jax.device_put(batch_fn(step), device)
+
+        super().__init__(staged, depth=depth)
+        self.device = device

@@ -41,6 +41,14 @@ BUCKETS = ("queue_wait", "host_assembly", "device_dispatch", "vocab_merge")
 
 _PREFIX = "stall"
 
+# The exhaustive *trainer-loop* buckets: every second of a training loop
+# is either blocked on input (the stall the e2e papers measure) or spent
+# in/waiting on the train step. The overlapped input bridge
+# (repro.train.input_pipeline) laps these around its iterator so
+# overlap-on vs overlap-off runs are directly comparable.
+E2E_BUCKETS = ("input_wait", "train_step")
+E2E_PREFIX = "e2e"
+
 
 class StallClock:
     """Lap timer attributing a loop's wall time to named buckets.
@@ -90,17 +98,22 @@ class StallClock:
 
 
 def report(
-    registry: counters_lib.Registry, prefix: str = _PREFIX
+    registry: counters_lib.Registry,
+    prefix: str = _PREFIX,
+    buckets: tuple[str, ...] = BUCKETS,
 ) -> dict:
     """The stall-attribution snapshot: per-bucket seconds, fractions of
     attributed wall time, and the wall total.
 
     Reads only registry counters — any process holding the registry can
     build the report (benchmarks, the service, a future multi-host
-    router scraping workers).
+    router scraping workers). ``buckets`` selects the clock being read:
+    the service-loop :data:`BUCKETS` (default) or the trainer-loop
+    :data:`E2E_BUCKETS`.
     """
+    bucket_names = buckets
     buckets = {}
-    for b in BUCKETS:
+    for b in bucket_names:
         c = registry.get(f"{prefix}.{b}_s")
         buckets[b] = float(c.value) if c is not None else 0.0
     wall_c = registry.get(f"{prefix}.wall_s")

@@ -53,6 +53,7 @@ import numpy as np
 from repro import obs
 from repro.core import pipeline as pipeline_lib
 from repro.core import vocab as vocab_lib
+from repro.data import chunk_cache as chunk_cache_lib
 from repro.obs import stall as stall_lib
 from repro.stream import metrics as metrics_lib
 from repro.stream import scheduler as scheduler_lib
@@ -103,6 +104,15 @@ class StreamingPreprocessService:
         ``PipelineConfig.track_vocab_counts``). Applied at construction
         and after every refresh merge, so the swap path re-caps
         deterministically regardless of delta arrival order.
+      cache: optional :class:`~repro.data.chunk_cache.ChunkCache`. When
+        set, every request is looked up by content-addressed key
+        (sha256 of its raw payload ⊕ plan signature ⊕ current vocab
+        digest) *before* loop-② dispatch: hits complete immediately with
+        the cached table — never touching the scheduler or the device —
+        and each miss's routed result is inserted on completion. The key
+        includes the vocab digest, recomputed at every atomic swap, so a
+        hit is always bit-identical to what dispatch would have produced;
+        determinism is unconditional (tests/test_e2e_overlap.py).
     """
 
     def __init__(
@@ -115,14 +125,20 @@ class StreamingPreprocessService:
         poll_s: float = 0.005,
         registry: obs.Registry | None = None,
         finalizer=vocab_lib.finalize,
+        cache: chunk_cache_lib.ChunkCache | None = None,
     ):
         self.config = config
         self._state = vocab_state
         self._finalizer = finalizer
         self.registry = registry if registry is not None else obs.Registry()
+        vocabulary = finalizer(vocab_state)
+        self.cache = cache
+        if cache is not None:
+            self._plan_sig = chunk_cache_lib.plan_signature(config)
+            self._vocab_digest = chunk_cache_lib.vocab_digest(vocabulary)
         self.scheduler = scheduler_lib.MicroBatchScheduler(
             config,
-            finalizer(vocab_state),
+            vocabulary,
             bucket_rows=bucket_rows,
             bytes_per_row=bytes_per_row,
             registry=self.registry,
@@ -289,6 +305,11 @@ class StreamingPreprocessService:
     ) -> scheduler_lib.StreamRequest:
         if self._thread is None:
             raise RuntimeError("service not started")
+        if self.cache is not None:
+            # Hash on the client thread: the digest is content-only (no
+            # vocab/plan component), so it cannot go stale, and it keeps
+            # sha256 work off the single service-loop thread.
+            req._raw_digest = chunk_cache_lib.raw_digest(req.payload)
         with self._submit_lock:
             if self._stop_evt.is_set():
                 raise RuntimeError("streaming service is stopping")
@@ -487,6 +508,12 @@ class StreamingPreprocessService:
                     gathered = self._gather(block=False)
                 self._g_qdepth.set(self._ingress.qsize())
                 self._stall.lap("queue_wait")
+                # Cache consult happens HERE — in the loop thread, after
+                # _apply_pending_vocab — so the vocab digest in every key
+                # is exactly the vocabulary this step would dispatch with.
+                # Hits complete immediately and fall out of the batch;
+                # the time is charged to host_assembly via the next lap.
+                gathered = self._consult_cache(gathered)
                 nxt = None
                 if gathered:
                     # With a batch in flight, this step's host work runs
@@ -572,9 +599,54 @@ class StreamingPreprocessService:
             with obs.span("vocab/merge", cat="vocab"):
                 self._state = merged = vocab_lib.merge(self._state, delta)
         with obs.span("vocab/swap", cat="vocab"):
-            self.scheduler.swap_vocabulary(self._finalizer(merged))
+            vocabulary = self._finalizer(merged)
+            self.scheduler.swap_vocabulary(vocabulary)
+        if self.cache is not None:
+            # New digest → new keys: entries under the superseded
+            # vocabulary stop matching and age out of the LRU naturally.
+            self._vocab_digest = chunk_cache_lib.vocab_digest(vocabulary)
         self._c_apply.add(1)
         obs.instant("vocab/applied", cat="vocab")
+
+    def _consult_cache(self, reqs: list) -> list:
+        """Complete cache hits immediately; return the misses.
+
+        Loop-thread only: keys combine each request's client-computed raw
+        digest with ``self._vocab_digest``, which only this thread
+        updates (in :meth:`_apply_pending_vocab`) — so a key can never
+        pair a payload with a vocabulary other than the one its batch
+        would have used. Misses keep their key for the insert at
+        :meth:`_complete`."""
+        if self.cache is None or not reqs:
+            return reqs
+        misses: list = []
+        hits: list = []
+        for req in reqs:
+            key = chunk_cache_lib.cache_key(
+                req._raw_digest, self._plan_sig, self._vocab_digest
+            )
+            val = self.cache.get(key)
+            if val is None:
+                req._cache_key = key
+                misses.append(req)
+            else:
+                hits.append((req, val))
+        # Finish hits only after the full scan: if a lookup raises, no
+        # request has been completed yet, so the loop's failure path can
+        # still fail the whole gathered list exactly once.
+        if hits:
+            now = time.perf_counter()
+            for req, val in hits:
+                req.done_t = now
+                self.metrics.record(now - req.submit_t, req.n_rows, now=now)
+                # Hand out copies: the cache's storage must survive
+                # whatever the consumer does with the result.
+                req._finish({k: np.array(v) for k, v in val.items()})
+            obs.instant("cache/hits", cat="stream", n=len(hits))
+            with self._cond:
+                self._outstanding -= len(hits)
+                self._cond.notify_all()
+        return misses
 
     def _gather(self, block: bool) -> list:
         """Coalesce queued requests FIFO up to the largest bucket.
@@ -616,6 +688,11 @@ class StreamingPreprocessService:
         results = self.scheduler.route(batch, out)
         now = time.perf_counter()
         for req, res in zip(batch.requests, results):
+            if self.cache is not None:
+                # Keyed at consult time, against the vocabulary this very
+                # batch dispatched with — inserting after a later vocab
+                # swap is still correct.
+                self.cache.put(req._cache_key, res)
             req.done_t = now
             self.metrics.record(now - req.submit_t, req.n_rows, now=now)
             req._finish(res)

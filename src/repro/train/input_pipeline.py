@@ -1,0 +1,227 @@
+"""Overlapped training input: StreamingPreprocessService → device batches.
+
+The paper's end-to-end claim is that preprocessing stalls the training
+accelerator; tf.data (Murray et al.) and "Understand Data Preprocessing"
+(PAPERS.md) show that input stall — not preprocessing throughput in
+isolation — dominates end-to-end cost. This module closes that loop: it
+drives DLRM training *directly* from the streaming preprocessing
+service, so the train step never waits on input when preprocessing keeps
+up, and every second it does wait is attributed.
+
+Dataflow (one :class:`TrainInputPipeline`):
+
+    raw payloads ──submit──▶ StreamingPreprocessService (loop ②, micro-
+      │                        batched, optionally ChunkCache-fronted)
+      │ results, in submission order
+      ▼
+    host assembly: concatenate preprocessed rows → fixed [batch_rows]
+      slices (batch k is always rows [k·B, (k+1)·B) of the stream — the
+      batch sequence is a pure function of the payload sequence, so
+      overlap and caching cannot change a single trained weight)
+      ▼
+    loader.DevicePrefetcher: depth-N staging — jax.device_put on batch
+      i+1..i+N while the donated train step for batch i runs
+      ▼
+    iterator → trainer (device-resident arrays, zero host sync)
+
+Overlap is a knob, not an architecture change: ``overlap=False`` runs
+the same assembly synchronously inside ``next()`` (the materialize-
+then-train baseline), which is what makes the stalls-vs-overlap
+comparison of ``benchmarks/e2e_overlap.py`` an apples-to-apples A/B.
+
+Attribution: the iterator laps a :class:`repro.obs.stall.StallClock`
+around every yield, splitting the consumer loop's wall time exhaustively
+into ``input_wait`` (blocked in ``next()``) vs ``train_step`` (time the
+caller held the batch) — :meth:`stall_report` is the snapshot, and the
+bridge's ``e2e.batches_total`` / ``e2e.rows_total`` / ``e2e.epochs_total``
+counters land in the same registry.
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Callable, Iterable, Iterator
+
+import numpy as np
+
+from repro import obs
+from repro.data import loader as loader_lib
+from repro.obs import stall as stall_lib
+
+FIELDS = ("label", "dense", "sparse")
+
+
+class TrainInputPipeline:
+    """Pulls preprocessed micro-batches from the stream service and
+    exposes a fixed-shape, device-resident batch iterator.
+
+    Args:
+      service: a started :class:`~repro.stream.StreamingPreprocessService`
+        (with or without a chunk cache — the bridge is oblivious; hits
+        just come back faster).
+      payload_factory: a zero-arg callable returning a fresh iterable of
+        raw payloads (utf8 byte arrays or binary column dicts — whatever
+        the service's ``input_format`` accepts). Called once per epoch:
+        when the stream runs dry and more batches are owed, the factory
+        is re-invoked, so multi-epoch training is just ``n_steps`` larger
+        than one epoch's worth. A plain list/tuple also works (it is
+        re-iterated per epoch).
+      batch_rows: rows per training batch. Batches are *consecutive*
+        row slices of the preprocessed stream — fixed order, independent
+        of overlap depth or cache state.
+      n_steps: total batches the iterator yields.
+      overlap: True — assemble + stage in a background
+        :class:`~repro.data.loader.DevicePrefetcher`; False — do the
+        same work synchronously inside ``next()`` (the stall baseline).
+      prefetch_depth: device-side staging depth (overlap mode).
+      inflight: service requests kept in flight ahead of assembly, so
+        the service's double-buffered loop always has a next batch.
+      device: target for ``jax.device_put`` (None = default device).
+      registry: where the stall clock + counters land (default: private).
+    """
+
+    def __init__(
+        self,
+        service,
+        payload_factory: Callable[[], Iterable] | Iterable,
+        *,
+        batch_rows: int,
+        n_steps: int,
+        overlap: bool = True,
+        prefetch_depth: int = 2,
+        inflight: int = 2,
+        device=None,
+        registry: obs.Registry | None = None,
+    ):
+        if batch_rows < 1:
+            raise ValueError(f"batch_rows must be >= 1, got {batch_rows}")
+        if n_steps < 1:
+            raise ValueError(f"n_steps must be >= 1, got {n_steps}")
+        self.service = service
+        if callable(payload_factory):
+            self._factory = payload_factory
+        else:
+            payloads = payload_factory
+            self._factory = lambda: iter(payloads)
+        self.batch_rows = int(batch_rows)
+        self.n_steps = int(n_steps)
+        self.overlap = bool(overlap)
+        self.prefetch_depth = int(prefetch_depth)
+        self.inflight = max(1, int(inflight))
+        self.device = device
+        self.registry = registry if registry is not None else obs.Registry()
+        self._c_batches = self.registry.counter(
+            "e2e.batches_total", "training batches produced by the input bridge"
+        )
+        self._c_rows = self.registry.counter(
+            "e2e.rows_total", "preprocessed rows delivered to training"
+        )
+        self._c_epochs = self.registry.counter(
+            "e2e.epochs_total", "payload-stream passes started"
+        )
+
+    # ------------------------------------------------------------------ #
+    # host side: service pull + fixed-shape slicing
+    # ------------------------------------------------------------------ #
+    def _host_batches(self) -> Iterator[dict]:
+        """Yield exactly ``n_steps`` host batches of ``batch_rows`` rows.
+
+        Keeps ``inflight`` service requests pending so the service's
+        double-buffered loop can overlap its own host assembly with
+        device dispatch; results are consumed strictly in submission
+        order, which pins the batch sequence."""
+        bufs: dict[str, list[np.ndarray]] = {k: [] for k in FIELDS}
+        buffered = 0
+        pending: collections.deque = collections.deque()
+        it = iter(self._factory())
+        self._c_epochs.add(1)
+        produced = 0
+        exhausted = False
+        while produced < self.n_steps:
+            if buffered < self.batch_rows:
+                while not exhausted and len(pending) < self.inflight:
+                    try:
+                        payload = next(it)
+                    except StopIteration:
+                        # epoch boundary: restart the payload stream
+                        it = iter(self._factory())
+                        self._c_epochs.add(1)
+                        try:
+                            payload = next(it)
+                        except StopIteration:
+                            exhausted = True  # factory yields nothing
+                            break
+                    pending.append(self.service.submit(payload))
+                if not pending:
+                    raise ValueError(
+                        "payload factory produced no payloads; cannot fill "
+                        f"batch of {self.batch_rows} rows"
+                    )
+                res = pending.popleft().result()
+                for k in FIELDS:
+                    bufs[k].append(np.asarray(res[k]))
+                buffered += int(np.asarray(res["label"]).shape[0])
+                continue
+            cat = {
+                k: v[0] if len(v) == 1 else np.concatenate(v)
+                for k, v in bufs.items()
+            }
+            batch = {
+                k: np.ascontiguousarray(cat[k][: self.batch_rows]) for k in FIELDS
+            }
+            for k in FIELDS:
+                bufs[k] = [cat[k][self.batch_rows :]]
+            buffered -= self.batch_rows
+            produced += 1
+            self._c_batches.add(1)
+            self._c_rows.add(self.batch_rows)
+            yield batch
+
+    # ------------------------------------------------------------------ #
+    # consumer side: device staging + stall attribution
+    # ------------------------------------------------------------------ #
+    def __iter__(self) -> Iterator[dict]:
+        """Yield ``n_steps`` device-resident batches, lapping the e2e
+        stall clock around each yield (``input_wait`` = blocked in the
+        bridge, ``train_step`` = time the caller held the batch)."""
+        import jax
+
+        gen = self._host_batches()
+        clock = stall_lib.StallClock(
+            self.registry,
+            buckets=stall_lib.E2E_BUCKETS,
+            prefix=stall_lib.E2E_PREFIX,
+        )
+        prefetcher = None
+        if self.overlap:
+            prefetcher = loader_lib.DevicePrefetcher(
+                lambda step: next(gen),
+                depth=self.prefetch_depth,
+                device=self.device,
+            ).start()
+            fetch = lambda: prefetcher.get()[1]  # noqa: E731
+        else:
+            fetch = lambda: jax.device_put(next(gen), self.device)  # noqa: E731
+        clock.start()
+        try:
+            for _ in range(self.n_steps):
+                with obs.span("e2e/input_wait", cat="e2e"):
+                    batch = fetch()
+                clock.lap("input_wait")
+                yield batch
+                clock.lap("train_step")
+        finally:
+            clock.stop("train_step")
+            if prefetcher is not None:
+                prefetcher.stop()
+
+    def stall_report(self) -> dict:
+        """Where the consumer loop's wall time went: exhaustive
+        ``input_wait`` vs ``train_step`` split (fractions + seconds) —
+        the number ``benchmarks/e2e_overlap.py`` compares across
+        overlap-on/off runs."""
+        return stall_lib.report(
+            self.registry,
+            prefix=stall_lib.E2E_PREFIX,
+            buckets=stall_lib.E2E_BUCKETS,
+        )

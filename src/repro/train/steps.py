@@ -73,6 +73,30 @@ def make_train_step(model, opt_cfg: opt_lib.AdamWConfig, microbatches: int = 1):
     return train_step
 
 
+def make_tabular_train_step(loss_fn, opt_cfg: opt_lib.AdamWConfig):
+    """Train step over an arbitrary batch-loss callable — the tabular
+    (DLRM) counterpart of :func:`make_train_step`, whose batch contract
+    is LM-shaped (``tokens``/``frames``/``vision``).
+
+    ``loss_fn(params, batch) → scalar`` — e.g. ``repro.models.dlrm.loss``
+    over ``{label, dense, sparse}`` batches straight from the overlapped
+    input bridge (``repro.train.input_pipeline``). Jit with
+    ``donate_argnums=(0, 1)``: the signature keeps params and opt_state
+    as the two leading args precisely so both buffers can be donated and
+    the step runs in place while the next batch stages.
+    """
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(p, batch))(params)
+        new_params, new_opt, metrics = opt_lib.adamw_update(
+            params, grads, opt_state, opt_cfg
+        )
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
 def make_prefill_step(model):
     """Prefill = trunk over the prompt + last-position head only (the full
     [B,S,V] logits of ``forward`` are never needed at prefill)."""

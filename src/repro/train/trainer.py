@@ -143,13 +143,57 @@ class Trainer:
         ema = None
         stragglers = 0
         rollbacks = 0
+        input_wait_s = 0.0
+
+        # Lagged loss sync: `float(metrics["loss"])` is a blocking host
+        # sync, so the hot path defers it one step — step i's scalar is
+        # read while step i+1 computes on the device, and the loop never
+        # stalls on a result it doesn't need yet. `pending` holds the one
+        # unresolved (step, metrics) pair; it is drained before every
+        # checkpoint save (and at loop exit) so no unchecked — possibly
+        # non-finite — step can ever be persisted.
+        pending: tuple | None = None
+
+        def resolve() -> int | None:
+            """Sync the lagged step's loss. Returns its step index when
+            the loss was non-finite (the caller rolls back), else None."""
+            nonlocal pending
+            if pending is None:
+                return None
+            (p_step, p_metrics), pending = pending, None
+            loss = float(p_metrics["loss"])
+            if not np.isfinite(loss):
+                return p_step
+            losses.append(loss)
+            return None
+
+        def rollback(bad_step: int) -> None:
+            """Loss-spike guard: restore the last checkpoint (the
+            in-flight step's params are discarded with it)."""
+            nonlocal params, opt_state, step, rollbacks, pending
+            pending = None
+            rollbacks += 1
+            last = ckpt_lib.latest_step(self.cfg.ckpt_dir)
+            if last is None:
+                raise FloatingPointError(f"non-finite loss at step {bad_step}")
+            self._ckpt.wait()
+            tree = {
+                "params": params_skeleton,
+                "opt": jax.eval_shape(opt_lib.adamw_init, params_skeleton),
+            }
+            restored = ckpt_lib.restore(self.cfg.ckpt_dir, last, tree)
+            params = jax.tree.map(jax.numpy.asarray, restored["params"])
+            opt_state = jax.tree.map(jax.numpy.asarray, restored["opt"])
+            step = last
 
         step = start
         while step < self.cfg.total_steps:
             t0 = time.perf_counter()
             batch = self.batch_fn(step)  # deterministic in step → skip-ahead
+            input_wait_s += time.perf_counter() - t0
             params, opt_state, metrics = self.train_step(params, opt_state, batch)
-            loss = float(metrics["loss"])
+            bad = resolve()  # previous step syncs while this one computes
+            pending = (step, metrics)
             dt = time.perf_counter() - t0
             step_times.append(dt)
             # step 0 includes jit compilation — keep it out of the EMA
@@ -162,32 +206,36 @@ class Trainer:
                 if self.straggler_callback:
                     self.straggler_callback(step, dt)
 
-            if not np.isfinite(loss):
-                # loss-spike guard: roll back to last checkpoint
-                rollbacks += 1
-                last = ckpt_lib.latest_step(self.cfg.ckpt_dir)
-                if last is None:
-                    raise FloatingPointError(f"non-finite loss at step {step}")
-                self._ckpt.wait()
-                tree = {
-                    "params": params_skeleton,
-                    "opt": jax.eval_shape(opt_lib.adamw_init, params_skeleton),
-                }
-                restored = ckpt_lib.restore(self.cfg.ckpt_dir, last, tree)
-                params = jax.tree.map(jax.numpy.asarray, restored["params"])
-                opt_state = jax.tree.map(jax.numpy.asarray, restored["opt"])
-                step = last
+            if bad is not None:
+                rollback(bad)
                 continue
 
-            losses.append(loss)
             step += 1
-            if step % self.cfg.ckpt_every == 0 or step == self.cfg.total_steps:
+            if (
+                step % self.cfg.ckpt_every == 0
+                or step == self.cfg.total_steps
+                or self._preempted
+            ):
+                bad = resolve()  # drain the lag: never persist unchecked
+                if bad is not None:
+                    rollback(bad)
+                    continue
                 self._save(step, params, opt_state)
             if self._preempted:
-                self._save(step, params, opt_state)
+                if pending is not None:
+                    # the flag landed after the boundary check evaluated
+                    # false — this step is still unsaved
+                    bad = resolve()
+                    if bad is not None:
+                        rollback(bad)
+                        continue
+                    self._save(step, params, opt_state)
                 self._ckpt.wait()
                 break
 
+        bad = resolve()  # loop exits with the lag drained, except via break
+        if bad is not None:
+            raise FloatingPointError(f"non-finite loss at step {bad}")
         self._ckpt.wait()
         return {
             "final_step": step,
@@ -196,6 +244,7 @@ class Trainer:
             "stragglers": stragglers,
             "rollbacks": rollbacks,
             "preempted": self._preempted,
+            "input_wait_s": input_wait_s,
             "params": params,
             "opt_state": opt_state,
         }

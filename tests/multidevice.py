@@ -14,8 +14,14 @@ import sys
 REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
-def run_with_devices(code: str, n_devices: int = 8, timeout: int = 480) -> str:
-    """Execute ``code`` with XLA_FLAGS device_count=n. Raises on failure."""
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 1200) -> str:
+    """Execute ``code`` with XLA_FLAGS device_count=n. Raises on failure.
+
+    The timeout is a hang backstop, not a perf bound: 8 forced host
+    devices spin-wait their collectives, so on a 1-core box the same
+    snippet can take 40s solo or several hundred seconds mid-suite
+    depending on scheduler timing — budget for the worst case.
+    """
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
     env["PYTHONPATH"] = os.path.abspath(REPO_SRC) + os.pathsep + env.get("PYTHONPATH", "")

@@ -119,3 +119,58 @@ def test_piper_token_batches():
     assert b0["tokens"].shape == (2, 16)
     assert b0["tokens"].max() < 50
     assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+# --------------------------------------------------------------------- #
+# DevicePrefetcher: the device-side staging wrapper of the e2e overlap
+# bridge — same Prefetcher contract, batches land on-device.
+# --------------------------------------------------------------------- #
+
+
+def test_prefetcher_rejects_bad_depth():
+    fn = loader.TokenBatches(vocab_size=10, batch=1, seq=4, seed=0)
+    with pytest.raises(ValueError, match="depth"):
+        loader.Prefetcher(fn, depth=0)
+    with pytest.raises(ValueError, match="depth"):
+        loader.DevicePrefetcher(fn, depth=-1)
+
+
+def test_device_prefetcher_orders_and_stages_on_device():
+    import jax
+
+    fn = loader.TokenBatches(vocab_size=10, batch=1, seq=4, seed=0)
+    pf = loader.DevicePrefetcher(fn, depth=4).start(start_step=3)
+    try:
+        for want in (3, 4, 5, 6):
+            step, batch = pf.get(timeout=10.0)
+            assert step == want
+            assert isinstance(batch["tokens"], jax.Array)  # device-resident
+            np.testing.assert_array_equal(
+                np.asarray(batch["tokens"]), fn(step)["tokens"]
+            )
+    finally:
+        pf.stop()
+
+
+def test_device_prefetcher_propagates_batch_fn_error():
+    def bad_fn(step):
+        if step >= 1:
+            raise ValueError("boom")
+        return {"x": np.zeros(2, np.float32)}
+
+    pf = loader.DevicePrefetcher(bad_fn, depth=2).start()
+    try:
+        assert pf.get(timeout=5.0)[0] == 0
+        with pytest.raises(RuntimeError, match="batch_fn failed") as ei:
+            pf.get(timeout=5.0)
+        assert isinstance(ei.value.__cause__, ValueError)
+    finally:
+        pf.stop()
+
+
+def test_device_prefetcher_stop_idempotent():
+    fn = loader.TokenBatches(vocab_size=10, batch=1, seq=4, seed=0)
+    pf = loader.DevicePrefetcher(fn, depth=2).start()
+    assert pf.get(timeout=10.0)[0] == 0
+    pf.stop()
+    pf.stop()  # second stop is a no-op, not an error
