@@ -45,7 +45,7 @@ if __package__ in (None, ""):  # direct script invocation
 import jax
 import numpy as np
 
-from repro import obs
+from benchmarks.common import RECORDS, emit, provenance
 from repro.core import pipeline as P, schema as schema_lib
 from repro.data import chunk_cache as chunk_cache_lib
 from repro.data import synth
@@ -54,7 +54,6 @@ from repro.stream import StreamingPreprocessService
 from repro.train import input_pipeline as input_lib
 from repro.train import optimizer as opt_lib
 from repro.train import steps as steps_lib
-from benchmarks.common import RECORDS, emit, provenance
 
 PAYLOAD_ROWS = 256          # rows per raw payload == rows per train batch
 BATCH_ROWS = 256

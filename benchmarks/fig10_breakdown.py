@@ -10,9 +10,9 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from benchmarks.common import emit, time_fn, time_host
 from repro.core import ops, pipeline as P, schema as schema_lib, vocab as vocab_lib
 from repro.data import synth
-from benchmarks.common import emit, time_fn, time_host
 
 ROWS = 6_000
 CHUNK = 1 << 17

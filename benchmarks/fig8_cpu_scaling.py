@@ -31,11 +31,10 @@ if __package__ in (None, ""):  # direct script invocation
     sys.path.insert(0, os.path.join(_ROOT, "src"))
     sys.path.insert(0, _ROOT)
 
-import numpy as np
 
+from benchmarks.common import emit
 from repro.core import baseline, schema as schema_lib
 from repro.data import synth
-from benchmarks.common import emit
 
 SHARD_COUNTS = (1, 2, 4, 8)
 

@@ -26,9 +26,9 @@ if __package__ in (None, ""):  # direct script invocation
 
 import jax.numpy as jnp
 
+from benchmarks.common import RECORDS, emit, provenance, time_fn, time_host
 from repro.core import baseline, pipeline as P, schema as schema_lib
 from repro.data import synth
-from benchmarks.common import RECORDS, emit, provenance, time_fn, time_host
 
 ROWS = 6_000
 CHUNK = 1 << 17

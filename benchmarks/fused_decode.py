@@ -17,7 +17,7 @@ the same device-resident UTF-8 byte buffer, for both memory tiers:
 
 Besides wall time, each tier reports **dispatches per chunk** (jaxpr
 primitives before XLA fusion, pjit bodies counted recursively — see
-``benchmarks.fused_vocab.count_dispatches``). The baseline —
+``repro.analysis.jaxpr_audit.count_dispatches``). The baseline —
 decode-then-fused, i.e. the decode ``pallas_call`` followed by the
 fused loop kernel ``pallas_call`` — needs at least two kernel launches
 with the decoded [rows, n_fields] table round-tripping HBM between
@@ -57,7 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn
-from benchmarks.fused_vocab import count_dispatches
+from repro.analysis.jaxpr_audit import count_dispatches
 from repro.core import schema as schema_lib, vocab as vocab_lib
 from repro.data import synth
 from repro.kernels.decode_utf8 import ops as decode_ops

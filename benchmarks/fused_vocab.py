@@ -55,6 +55,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn
+# dispatch counting lives in the static analyzer (the CI gate and this
+# benchmark must agree on the definition by construction)
+from repro.analysis.jaxpr_audit import count_dispatches
 from repro.core import ops, schema as schema_lib, vocab as vocab_lib
 from repro.data import synth
 from repro.kernels.fused_vocab import ops as fv_ops
@@ -66,30 +69,6 @@ TIER_SCHEMAS = {
     "vmem": schema_lib.CRITEO,
     "hbm_slab": schema_lib.CRITEO_1M,
 }
-
-
-# call-like wrappers that are pure structure (inlined by XLA), not work:
-# descend into their bodies instead of counting them
-_CALL_PRIMS = ("pjit", "closed_call", "core_call", "custom_jvp_call")
-
-
-def count_dispatches(fn, *args) -> int:
-    """Primitive count of ``fn``'s jaxpr. pjit/call wrappers are
-    descended into (they are structure, not work); everything else —
-    including a ``pallas_call``, which is ONE kernel launch no matter
-    how long the on-chip chain inside it is — counts as one dispatch."""
-
-    def count(jaxpr) -> int:
-        n = 0
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name in _CALL_PRIMS:
-                sub = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
-                n += count(getattr(sub, "jaxpr", sub))
-            else:
-                n += 1
-        return n
-
-    return count(jax.make_jaxpr(fn)(*args).jaxpr)
 
 
 def run_tier(tier: str, rows: int) -> None:

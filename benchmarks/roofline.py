@@ -28,11 +28,10 @@ from __future__ import annotations
 import glob
 import json
 import os
-import sys
 
 from repro import configs
 from repro.configs import shapes as shapes_lib
-from repro.hw import TPU_V5E, roofline_terms
+from repro.hw import roofline_terms
 from repro.models.common import ModelConfig
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")

@@ -13,11 +13,10 @@ the roofline analysis, not here.
 from __future__ import annotations
 
 import jax.numpy as jnp
-import numpy as np
 
+from benchmarks.common import emit, time_fn, time_host
 from repro.core import baseline, pipeline as P, schema as schema_lib
 from repro.data import synth
-from benchmarks.common import emit, time_fn, time_host
 
 ROWS = 6_000
 CHUNK = 1 << 18

@@ -11,12 +11,12 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.common import emit, time_fn, time_host
 from repro.core import baseline, ops, schema as schema_lib, vocab as vocab_lib
 from repro.data import synth
 from repro.kernels.decode_utf8 import ref as dref
 from repro.kernels.dense_xform import kernel as dx_kernel
-from repro.kernels.vocab import kernel as v_kernel, ref as v_ref
-from benchmarks.common import emit, time_fn, time_host
+from repro.kernels.vocab import kernel as v_kernel
 
 ROWS = 4_000
 

@@ -1,0 +1,32 @@
+"""Static plan/kernel/concurrency verifier — ``python -m repro.analysis``.
+
+Piper's dataflow is fixed and statically known, which means most of
+this repo's past production bug classes — the int32 position overflow
+(PR 8), the ``_vocab_lock`` race (PR 6), VMEM-budget/tier-routing
+constants hand-reconciled across kernel packages — were statically
+decidable. This package decides them, on every PR, as a failing CI
+gate. Four passes:
+
+  planlint     interval abstract interpretation over ``PreprocPlan``
+               op chains (overflow, index-bounds, ordering hazards,
+               dead/no-op stages) — :mod:`repro.analysis.planlint`
+  kernelcheck  declared VMEM accounting vs. the tier router, plus the
+               aliasing/grid-carry race audit of every pallas_call —
+               :mod:`repro.analysis.kernelcheck`
+  jaxpr        hot-path dispatch counting, host-callback detection,
+               donation audit — :mod:`repro.analysis.jaxpr_audit`
+  locklint     declared lock discipline over the stream service and
+               trainer — :mod:`repro.analysis.locklint`
+
+Findings are :class:`~repro.analysis.findings.Finding` records
+(rule id, severity, location); reviewed residual findings live in
+``analysis/baseline.json`` and ``--strict`` fails on anything outside
+it. Rule table and baseline workflow: docs/ARCHITECTURE.md §10.
+"""
+
+from repro.analysis.findings import (  # noqa: F401
+    Finding,
+    diff_baseline,
+    dump_findings,
+    load_baseline,
+)

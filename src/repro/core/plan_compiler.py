@@ -462,6 +462,95 @@ class CompiledPlan:
             max_rows,
         )
 
+    def static_routes(self, *, max_rows: int | None = None) -> dict:
+        """Structured route + VMEM-footprint metadata for every dispatch
+        the compiled program can issue — the single source
+        ``repro.analysis.kernelcheck`` consumes instead of re-deriving
+        widths from the plan. Each entry pairs the route label the obs
+        spans use with the kernel package's declared ``vmem_accounting``
+        and the budget its tier guard charges it against.
+
+        ``max_rows`` adds the ``decode_xform`` entry (that tier depends
+        on the per-engine chunk row capacity)."""
+        from repro.kernels.fused_decode_vocab import ops as fdv_ops
+        from repro.kernels.fused_decode_xform import ops as fdx_ops
+        from repro.kernels.fused_vocab import ops as fv_ops
+        from repro.kernels.fused_xform import ops as fx_ops
+
+        n_apply = max(self._n_apply_columns, 1)
+        n_vocab = max(self.n_vocab_columns, 1)
+        vocab_tier = self.vocab_tier
+        slab = None
+        if vocab_tier == "hbm_slab":
+            slab = (
+                self.vocab_slab_range
+                if self.vocab_slab_range is not None
+                else fv_ops.default_slab_range(
+                    n_vocab, self.vocab_range, self.track_counts
+                )
+            )
+        routes = {
+            "xform": {
+                "route": self.xform_route,
+                "tier": self.tier,
+                "n_columns": n_apply,
+                "vocab_range": self.vocab_range,
+                "footprint": fx_ops.vmem_accounting(
+                    n_apply,
+                    self.vocab_range,
+                    n_dense=len(self._fused_dense_slots),
+                ),
+                "carried": ("table_stack",),
+                "budget": fx_ops.FUSED_TABLE_VMEM_BYTES,
+            },
+            "vocab": {
+                "route": self.vocab_route,
+                "tier": vocab_tier,
+                "n_columns": n_vocab,
+                "vocab_range": self.vocab_range,
+                "slabs": self.vocab_slabs,
+                "footprint": fv_ops.vmem_accounting(
+                    n_vocab,
+                    self.vocab_range,
+                    track_counts=self.track_counts,
+                    slab_range=slab,
+                ),
+                "carried": ("state_stack", "counts_stack"),
+                "budget": (
+                    fv_ops.SLAB_VMEM_BYTES
+                    if vocab_tier == "hbm_slab"
+                    else fv_ops.FUSED_STATE_VMEM_BYTES
+                ),
+            },
+            "decode_vocab": {
+                "route": self.decode_vocab_route,
+                "tier": self.vocab_tier,
+                "n_columns": n_vocab,
+                "vocab_range": self.vocab_range,
+                "footprint": fdv_ops.vmem_accounting(
+                    n_vocab, self.vocab_range
+                ),
+                "carried": ("state_stack",),
+                "budget": fv_ops.FUSED_STATE_VMEM_BYTES,
+            },
+        }
+        if max_rows is not None:
+            routes["decode_xform"] = {
+                "route": self.decode_xform_route(max_rows),
+                "tier": self.decode_xform_route(max_rows).split("/")[-1],
+                "n_columns": self.schema.n_sparse,
+                "vocab_range": self.vocab_range,
+                "footprint": fdx_ops.vmem_accounting(
+                    self.schema.n_dense,
+                    self.schema.n_sparse,
+                    self.vocab_range,
+                    max_rows,
+                ),
+                "carried": ("table_stack", "out_table"),
+                "budget": fx_ops.FUSED_TABLE_VMEM_BYTES,
+            }
+        return routes
+
     def describe(self) -> str:
         head = (
             f"CompiledPlan: {self.n_dense_out} dense + {self.n_sparse_out} "

@@ -34,6 +34,23 @@ from repro.kernels.fused_decode_vocab import kernel
 from repro.kernels.fused_vocab import ops as fv_ops
 
 
+def vmem_accounting(
+    n_cols: int, vocab_range: int, *, block: int = 0
+) -> dict[str, int]:
+    """Bytes of each VMEM-resident buffer the bytes-in loop-① kernel
+    carries: the grid-carried ``state_stack`` (identical to the
+    decoded-input kernel's — same budget, same tier decision), the
+    streamed byte tile, and the SMEM decode carry ``(m, a, neg,
+    ndelim)``. ``block`` defaults to the kernel's byte-tile size.
+    Audited by ``repro.analysis.kernelcheck`` against
+    :func:`fused_decode_vocab_tier`."""
+    return {
+        "state_stack": n_cols * vocab_range * 4,
+        "byte_tile": block or kernel.BLOCK,
+        "decode_carry": 4 * 4,
+    }
+
+
 def fused_decode_vocab_tier(n_cols: int, vocab_range: int) -> str:
     """Which tier the bytes-in loop-① dispatch picks — the state residency
     condition is identical to the decoded-input fused kernel's. Only the

@@ -31,17 +31,41 @@ from repro.kernels.fused_decode_xform import kernel
 from repro.kernels.fused_xform import ops as fx_ops
 
 
+def vmem_accounting(
+    n_dense: int,
+    n_sparse: int,
+    vocab_range: int,
+    max_rows: int,
+    *,
+    block: int = 0,
+) -> dict[str, int]:
+    """Bytes of each VMEM-resident buffer the bytes-in loop-② kernel
+    carries: the grid-carried vocabulary ``table_stack`` AND the
+    accumulated ``[max_rows + 1, n_fields]`` ``out_table`` (both
+    constant-index-map blocks, resident for the whole call — they share
+    the budget, which is why the tier depends on ``max_rows``), the
+    streamed byte tile, and the SMEM decode carry. Audited by
+    ``repro.analysis.kernelcheck`` against :func:`fused_decode_tier`,
+    which derives its decision from this dict."""
+    n_fields = 1 + n_dense + n_sparse
+    return {
+        "table_stack": n_sparse * vocab_range * 4,
+        "out_table": (max_rows + 1) * n_fields * 4,
+        "byte_tile": block or kernel.BLOCK,
+        "decode_carry": 4 * 4,
+    }
+
+
 def fused_decode_tier(
     n_dense: int, n_sparse: int, vocab_range: int, max_rows: int
 ) -> str:
     """Which tier the bytes-in loop-② dispatch picks: ``"vmem"`` or
     ``"hbm"`` — vocabulary stack + output table share the 8 MiB budget."""
-    n_fields = 1 + n_dense + n_sparse
-    table_bytes = n_sparse * vocab_range * 4
-    out_bytes = (max_rows + 1) * n_fields * 4
+    acct = vmem_accounting(n_dense, n_sparse, vocab_range, max_rows)
     if (
         vocab_range <= vocab_lib.VMEM_TIER_MAX
-        and table_bytes + out_bytes <= fx_ops.FUSED_TABLE_VMEM_BYTES
+        and acct["table_stack"] + acct["out_table"]
+        <= fx_ops.FUSED_TABLE_VMEM_BYTES
     ):
         return "vmem"
     return "hbm"

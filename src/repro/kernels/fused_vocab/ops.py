@@ -52,9 +52,10 @@ from repro.kernels.fused_vocab import kernel
 # VMEM budget for the resident first_pos stack (all columns at once) —
 # the same 8 MiB residency budget as the fused loop-② table stack
 # (kernels/fused_xform/ops.py): half of a 16 MiB/core VMEM, leaving room
-# for the row tiles + double buffering. Criteo at the paper's 5K point:
-# 26 × 5000 × 4 B ≈ 0.5 MiB — comfortably in; 26 columns at
-# VMEM_TIER_MAX would be 52 MiB — routed to the HBM-slab tier.
+# for the row tiles + double buffering. Worked numbers live in
+# ``vmem_accounting`` (audited by repro.analysis.kernelcheck): Criteo's
+# 5K point keeps the stack well inside; the same stack at VMEM_TIER_MAX
+# widths blows the budget and routes to the HBM-slab tier.
 FUSED_STATE_VMEM_BYTES = 8 * 1024 * 1024
 # Budget for ONE resident slab on the hbm_slab tier: half the stack
 # budget, so the Pallas pipeline can double-buffer the next slab's DMA
@@ -67,6 +68,37 @@ SLAB_LANE = 128
 def _entry_bytes(track_counts: bool) -> int:
     # int32 first_pos, plus an int32 count plane when tracked.
     return 8 if track_counts else 4
+
+
+def vmem_accounting(
+    n_cols: int,
+    vocab_range: int,
+    *,
+    row_block: int = 256,
+    track_counts: bool = False,
+    slab_range: int | None = None,
+) -> dict[str, int]:
+    """Bytes of each VMEM-resident buffer the fused loop-① kernel carries.
+
+    ``state_stack`` (plus ``counts_stack`` when tracked) is the
+    grid-carried accumulator block: the whole ``[n_cols, vocab_range]``
+    stack on the vmem tier, or one ``[n_cols, slab_range]`` slab on the
+    hbm_slab tier (pass ``slab_range``). The carried entries are what
+    the tier guards charge against :data:`FUSED_STATE_VMEM_BYTES` /
+    :data:`SLAB_VMEM_BYTES`; the row tiles stream per grid step. This
+    dict is the package's declared footprint — ``fused_vocab_tier``
+    derives its decision from it, and ``repro.analysis.kernelcheck``
+    asserts the two never disagree.
+    """
+    width = slab_range if slab_range else vocab_range
+    acct = {
+        "state_stack": n_cols * width * 4,
+        "sparse_tile": row_block * n_cols * 4,
+        "pos_tile": row_block * 4,
+    }
+    if track_counts:
+        acct["counts_stack"] = n_cols * width * 4
+    return acct
 
 
 def default_slab_range(
@@ -107,7 +139,8 @@ def fused_vocab_tier(
     both the residency cutoff and the slab width."""
     if slab_range is not None:
         return "hbm_slab" if slab_range > 0 else "xla_fallback"
-    state_bytes = n_cols * vocab_range * _entry_bytes(track_counts)
+    acct = vmem_accounting(n_cols, vocab_range, track_counts=track_counts)
+    state_bytes = acct["state_stack"] + acct.get("counts_stack", 0)
     if (
         vocab_range <= vocab_lib.VMEM_TIER_MAX
         and state_bytes <= FUSED_STATE_VMEM_BYTES

@@ -30,14 +30,42 @@ from repro.kernels.fused_xform import kernel, ref
 
 # VMEM budget for the resident table stack (all columns at once). 8 MiB
 # leaves half of a 16 MiB/core VMEM for the row tiles + double buffering.
-# Criteo at the paper's 5K point: 26 × 5000 × 4 B ≈ 0.5 MiB — comfortably
-# in; 26 columns at VMEM_TIER_MAX would be 52 MiB — routed to HBM tier.
+# Worked numbers live in ``vmem_accounting`` (the one structured place
+# repro.analysis.kernelcheck audits): Criteo's 5K point keeps the stack
+# well inside; the same stack at VMEM_TIER_MAX widths blows the budget
+# and routes to the HBM tier.
 FUSED_TABLE_VMEM_BYTES = 8 * 1024 * 1024
+
+
+def vmem_accounting(
+    n_sparse: int,
+    vocab_range: int,
+    *,
+    n_dense: int = 0,
+    row_block: int = 256,
+) -> dict[str, int]:
+    """Bytes of each VMEM-resident buffer the fused kernel carries.
+
+    ``table_stack`` is the grid-carried block (constant index map — the
+    whole per-column vocabulary stack resident for the call) and is the
+    only entry charged against :data:`FUSED_TABLE_VMEM_BYTES`; the tiles
+    stream per grid step and live in the budget's other half. This dict
+    is the kernel package's declared footprint — ``fused_tier`` derives
+    its decision from it, and ``repro.analysis.kernelcheck`` asserts the
+    two never disagree.
+    """
+    return {
+        "table_stack": n_sparse * vocab_range * 4,
+        "sparse_tile": row_block * n_sparse * 4,
+        "dense_tile": row_block * n_dense * 4,
+        "ids_tile": row_block * n_sparse * 4,
+        "dense_out_tile": row_block * n_dense * 4,
+    }
 
 
 def fused_tier(n_sparse: int, vocab_range: int) -> str:
     """Which tier the fused dispatch picks: ``"vmem"`` or ``"hbm"``."""
-    table_bytes = n_sparse * vocab_range * 4
+    table_bytes = vmem_accounting(n_sparse, vocab_range)["table_stack"]
     if (
         vocab_range <= vocab_lib.VMEM_TIER_MAX
         and table_bytes <= FUSED_TABLE_VMEM_BYTES

@@ -21,7 +21,6 @@ from repro import configs
 from repro.core import pipeline as pipeline_lib
 from repro.data import loader, synth
 from repro.launch import specs as specs_lib
-from repro.models import lm as lm_lib
 from repro.train import optimizer as opt_lib
 from repro.train import trainer as trainer_lib
 

@@ -15,7 +15,6 @@ preprocessing output feeds training without any resharding collective.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

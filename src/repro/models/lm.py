@@ -19,7 +19,6 @@ Entry points per model:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax

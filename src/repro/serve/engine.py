@@ -16,7 +16,6 @@ prefill_32k cells).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

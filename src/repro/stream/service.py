@@ -235,11 +235,13 @@ class StreamingPreprocessService:
         t, self._thread = self._thread, None
         if t is not None:
             t.join()
+        # _carry is loop-thread state; the join above is the only
+        # synchronization it needs, so keep it out of _submit_lock
+        leftovers = []
+        if self._carry is not None:
+            leftovers.append(self._carry)
+            self._carry = None
         with self._submit_lock:
-            leftovers = []
-            if self._carry is not None:
-                leftovers.append(self._carry)
-                self._carry = None
             while True:
                 try:
                     leftovers.append(self._ingress.get_nowait())
@@ -382,8 +384,8 @@ class StreamingPreprocessService:
         ingestion — not later inside the service loop, where the failure
         would take every in-flight request down with it.
         """
-        vocab_lib.check_compatible(self._state, delta_state)
         with self._vocab_lock:
+            vocab_lib.check_compatible(self._state, delta_state)
             if self._pending_delta is None:
                 self._pending_delta = delta_state
             else:
@@ -474,7 +476,8 @@ class StreamingPreprocessService:
     def vocab_state(self) -> vocab_lib.VocabState:
         """The service's current merged loop-① state (refresh deltas not
         yet applied by the loop are excluded)."""
-        return self._state
+        with self._vocab_lock:
+            return self._state
 
     def compile_cache_size(self) -> int:
         return self.scheduler.compile_cache_size()

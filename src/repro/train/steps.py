@@ -18,7 +18,6 @@ bounded large-batch training).
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

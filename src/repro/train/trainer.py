@@ -25,7 +25,7 @@ from __future__ import annotations
 import dataclasses
 import signal
 import time
-from typing import Any, Callable, Iterator
+from typing import Any, Callable
 
 import jax
 import numpy as np

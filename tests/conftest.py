@@ -1,10 +1,8 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 device;
 multi-device tests spawn subprocesses (see tests/multidevice.py)."""
 
-import numpy as np
 import pytest
 
-from repro.core import schema as schema_lib
 from repro.data import synth
 
 

@@ -1,0 +1,475 @@
+"""repro.analysis: every rule fires on a seeded negative, and the repo
+itself lints clean.
+
+The analyzer is a CI gate — a gate that cannot fail is decoration. Each
+pass therefore gets (a) a known-bad input that must produce its finding
+and (b) a clean input that must not, plus the repo-wide runs that pin
+the steady state the reviewed baseline encodes (currently: empty).
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import __main__ as cli
+from repro.analysis import findings as findings_lib
+from repro.analysis import jaxpr_audit, kernelcheck, locklint, planlint
+from repro.core import plan as plan_lib
+from repro.core import schema as schema_lib
+from repro.core.plan import ColumnSpec, PreprocPlan, op
+
+ROOT = cli.repo_root()
+SMALL = schema_lib.TableSchema(n_dense=4, n_sparse=5, vocab_range=101)
+
+
+def rules(findings):
+    return sorted({f.rule for f in findings})
+
+
+def sparse(ops, source=0, name=""):
+    return ColumnSpec(kind="sparse", source=source, ops=tuple(ops), name=name)
+
+
+def dense(ops, source=0, name=""):
+    return ColumnSpec(kind="dense", source=source, ops=tuple(ops), name=name)
+
+
+# --------------------------------------------------------------------- #
+# planlint
+# --------------------------------------------------------------------- #
+def test_planlint_overflowing_modulus_pl101():
+    plan = PreprocPlan(
+        (sparse([op("Modulus", range=2**32), op("GenVocab"), op("ApplyVocab")]),)
+    )
+    found = planlint.lint_plan(plan, SMALL)
+    assert "PL101" in rules(found)
+    assert any("PR-8" in f.message for f in found)
+
+
+def test_planlint_scatter_out_of_bounds_pl102():
+    # no Modulus: the raw uint32 hash bits reach GenVocab unreduced
+    plan = PreprocPlan((sparse([op("GenVocab"), op("ApplyVocab")]),))
+    found = planlint.lint_plan(plan, SMALL)
+    assert "PL102" in rules(found)
+
+
+def test_planlint_vocab_range_mismatch_pl103():
+    plan = PreprocPlan(
+        (sparse([op("Modulus", range=7), op("GenVocab"), op("ApplyVocab")]),)
+    )
+    found = planlint.lint_plan(plan, SMALL)
+    assert "PL103" in rules(found)
+    assert any("check_compatible" in f.message for f in found)
+    # the mismatch is a merge hazard, not an overflow — no errors
+    assert not any(f.rule == "PL102" for f in found)
+
+
+def test_planlint_log_of_negative_pl110():
+    found = planlint.lint_plan(PreprocPlan((dense([op("Logarithm")]),)), SMALL)
+    assert "PL110" in rules(found)
+    # the canonical guarded chain is clean
+    ok = planlint.lint_plan(
+        PreprocPlan((dense([op("Neg2Zero"), op("Logarithm")]),)), SMALL
+    )
+    assert ok == []
+
+
+def test_planlint_noop_stage_pl120():
+    found = planlint.lint_plan(
+        PreprocPlan((dense([op("Neg2Zero"), op("Neg2Zero"), op("Logarithm")]),)),
+        SMALL,
+    )
+    assert rules(found) == ["PL120"]
+    found = planlint.lint_plan(
+        PreprocPlan(
+            (dense([op("Clip", lo=-3.0e9, hi=3.0e9), op("Neg2Zero")]),)
+        ),
+        SMALL,
+    )
+    assert "PL120" in rules(found)
+
+
+def test_planlint_dead_genvocab_pl121():
+    plan = PreprocPlan((sparse([op("Modulus"), op("GenVocab")]),))
+    found = planlint.lint_plan(plan, SMALL)
+    assert "PL121" in rules(found)
+    assert all(f.severity == "warning" for f in found)
+
+
+def test_planlint_position_overflow_pl130():
+    assert planlint.check_positions(1 << 20) == []
+    found = planlint.check_positions(2**31 + 1)
+    assert rules(found) == ["PL130"]
+    assert found[0].severity == "error"
+
+
+def test_planlint_stock_plans_clean():
+    from repro.core import pipeline as pipeline_lib
+
+    chunk_rows = pipeline_lib.PipelineConfig().max_rows_per_chunk
+    for plan, schema in (
+        (plan_lib.criteo_default(schema_lib.CRITEO), schema_lib.CRITEO),
+        (plan_lib.criteo_default(schema_lib.CRITEO_1M), schema_lib.CRITEO_1M),
+        (plan_lib.crossed_criteo(schema_lib.CRITEO), schema_lib.CRITEO),
+    ):
+        assert (
+            planlint.lint_plan(
+                plan, schema, max_rows_per_chunk=chunk_rows
+            )
+            == []
+        )
+
+
+# --------------------------------------------------------------------- #
+# kernelcheck
+# --------------------------------------------------------------------- #
+class _StubCompiled:
+    """A compiled plan whose router lies — the checker must notice."""
+
+    vocab_slab_range = None
+    track_counts = False
+
+    def __init__(self, entry):
+        self._entry = entry
+
+    def static_routes(self, *, max_rows=None):
+        return {"xform": self._entry}
+
+
+def test_kernelcheck_vmem_over_budget_kc201():
+    stub = _StubCompiled(
+        {
+            "route": "stub",
+            "tier": "vmem",
+            "n_columns": 26,
+            "vocab_range": 200_000,
+            "footprint": {"table_stack": 26 * 200_000 * 4},
+            "carried": ("table_stack",),
+            "budget": 8 << 20,
+        }
+    )
+    found = kernelcheck.check_routes(stub, context="stub")
+    assert rules(found) == ["KC201"]
+    assert found[0].severity == "error"
+
+
+def test_kernelcheck_needless_demotion_kc202():
+    stub = _StubCompiled(
+        {
+            "route": "stub",
+            "tier": "hbm",
+            "n_columns": 2,
+            "vocab_range": 100,
+            "footprint": {"table_stack": 2 * 100 * 4},
+            "carried": ("table_stack",),
+            "budget": 8 << 20,
+        }
+    )
+    found = kernelcheck.check_routes(stub, context="stub")
+    assert rules(found) == ["KC202"]
+
+
+def test_kernelcheck_shape_matrix_clean():
+    assert kernelcheck.check_shape_matrix() == []
+
+
+_RACY_KERNEL = '''
+import functools
+from jax.experimental import pallas as pl
+
+def _scatter_kernel(x_ref, st_ref, o_ref):
+    o_ref[...] = st_ref[...] + x_ref[...]
+
+def launch(x, state):
+    aliases = {1: 0}
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid=(4, 8),
+        in_specs=[
+            pl.BlockSpec((8, 128), lambda s, r: (s, r)),
+            pl.BlockSpec((8, 128), lambda s, r: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((8, 128), lambda s, r: (0, 0)),
+        input_output_aliases=aliases,
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("parallel", "parallel"))
+        ),
+    )(x, state)
+'''
+
+_UNSEEDED_KERNEL = '''
+from jax.experimental import pallas as pl
+
+def _acc_kernel(x_ref, o_ref):
+    o_ref[...] += x_ref[...]
+
+def launch(x):
+    return pl.pallas_call(
+        _acc_kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((8, 128), lambda r: (r,))],
+        out_specs=pl.BlockSpec((8, 128), lambda r: (0,)),
+    )(x)
+'''
+
+_PARTIAL_WHEN_KERNEL = '''
+import functools
+from jax.experimental import pallas as pl
+
+def _seeded_kernel(x_ref, o_ref, *, scale):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = x_ref[...] * 0
+
+    o_ref[...] += x_ref[...] * scale
+
+def launch(x):
+    kernel = functools.partial(_seeded_kernel, scale=2.0)
+    return pl.pallas_call(
+        kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((8, 128), lambda r: (r,))],
+        out_specs=pl.BlockSpec((8, 128), lambda r: (0,)),
+    )(x)
+'''
+
+
+def test_kernelcheck_parallel_carried_accumulator_kc210():
+    found = kernelcheck.audit_kernel_source(_RACY_KERNEL, "scratch.py")
+    assert "KC210" in rules(found)
+    assert any(f.severity == "error" for f in found)
+
+
+def test_kernelcheck_unseeded_carried_out_kc211():
+    found = kernelcheck.audit_kernel_source(_UNSEEDED_KERNEL, "scratch.py")
+    assert rules(found) == ["KC211"]
+    assert found[0].severity == "warning"
+
+
+def test_kernelcheck_partial_indirection_sees_when_init():
+    # regression: the pl.when seed lives in a functools.partial-wrapped
+    # kernel bound to a local name (the flash-attention shape)
+    assert kernelcheck.audit_kernel_source(_PARTIAL_WHEN_KERNEL, "s.py") == []
+
+
+def test_kernelcheck_repo_kernels_clean():
+    assert kernelcheck.check_repo_kernels(ROOT) == []
+
+
+# --------------------------------------------------------------------- #
+# jaxpr audit
+# --------------------------------------------------------------------- #
+def test_count_dispatches_basics():
+    one = jnp.ones((8,), jnp.float32)
+    assert jaxpr_audit.count_dispatches(lambda x: x + 1, one) == 1
+    # pjit wrappers are structure, not work
+    inner = jax.jit(lambda x: x * 2 + 1)
+    assert jaxpr_audit.count_dispatches(lambda x: inner(x) + 1, one) == 3
+
+
+def test_find_callbacks_flags_host_round_trip():
+    one = jnp.ones((4,), jnp.float32)
+
+    def hot_path(x):
+        y = jax.pure_callback(
+            lambda a: np.asarray(a) * 2,
+            jax.ShapeDtypeStruct(one.shape, one.dtype),
+            x,
+        )
+        return y + 1
+
+    hits = jaxpr_audit.find_callbacks(hot_path, one)
+    assert hits and all("callback" in h for h in hits)
+    assert jaxpr_audit.find_callbacks(lambda x: x + 1, one) == []
+
+
+def test_jaxpr_fused_strictly_reduces_dispatches():
+    found, stats = jaxpr_audit.check_fused_reduction()
+    assert found == []
+    assert stats["fused/vocab_step"] < stats["unfused/vocab_step"]
+    assert stats["fused/transform"] < stats["unfused/transform"]
+
+
+def test_donation_audit_jx310():
+    bad = "import jax\nstep = jax.jit(make_train_step(model))\n"
+    found = jaxpr_audit.audit_donation_source(bad, "scratch.py")
+    assert rules(found) == ["JX310"]
+    good = (
+        "import jax\n"
+        "step = jax.jit(make_train_step(model), donate_argnums=(0, 1))\n"
+    )
+    assert jaxpr_audit.audit_donation_source(good, "scratch.py") == []
+    # non-step jits carry no donation contract
+    other = "import jax\nf = jax.jit(render_frame)\n"
+    assert jaxpr_audit.audit_donation_source(other, "scratch.py") == []
+
+
+def test_jaxpr_repo_hot_paths_clean():
+    found, stats = jaxpr_audit.run(ROOT)
+    assert found == []
+    assert stats["criteo-5k/vocab_step"] > 0
+    assert stats["criteo-5k/transform"] > 0
+
+
+# --------------------------------------------------------------------- #
+# locklint
+# --------------------------------------------------------------------- #
+_PR6_RACE = '''
+import threading
+
+class Service:
+    def __init__(self):
+        self._vocab_lock = threading.Lock()
+        self._pending_delta = None
+
+    def refresh(self, delta):
+        with self._vocab_lock:
+            self._pending_delta = delta
+
+    def loop_step(self):
+        delta = self._pending_delta
+        return delta
+'''
+
+
+def test_locklint_pr6_unguarded_read_lk402():
+    found = locklint.lint_source(_PR6_RACE, "scratch.py")
+    assert rules(found) == ["LK402"]
+    (f,) = found
+    assert f.obj == "Service.loop_step/_pending_delta"
+    assert "_vocab_lock" in f.message and "PR-6" in f.message
+
+
+def test_locklint_unguarded_write_lk401():
+    src = _PR6_RACE + (
+        "\n    def clobber(self):\n        self._pending_delta = None\n"
+    )
+    found = locklint.lint_source(src, "scratch.py")
+    assert rules(found) == ["LK401", "LK402"]
+
+
+def test_locklint_guarded_access_clean():
+    src = _PR6_RACE.replace(
+        "        delta = self._pending_delta\n        return delta",
+        "        with self._vocab_lock:\n"
+        "            delta = self._pending_delta\n"
+        "        return delta",
+    )
+    assert locklint.lint_source(src, "scratch.py") == []
+
+
+def test_locklint_ignore_comment_honored():
+    src = _PR6_RACE.replace(
+        "delta = self._pending_delta",
+        "delta = self._pending_delta  # locklint: ignore[LK402]",
+    )
+    assert locklint.lint_source(src, "scratch.py") == []
+    # an ignore for a different rule does not suppress
+    src = _PR6_RACE.replace(
+        "delta = self._pending_delta",
+        "delta = self._pending_delta  # locklint: ignore[LK401]",
+    )
+    assert rules(locklint.lint_source(src, "scratch.py")) == ["LK402"]
+
+
+def test_locklint_init_exempt():
+    # construction happens-before any concurrent access: __init__ writes
+    # confer no ownership and need no lock
+    src = '''
+import threading
+
+class S:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._x = 0
+        self._x = 1
+
+    def read(self):
+        return self._x
+'''
+    assert locklint.lint_source(src, "scratch.py") == []
+
+
+def test_locklint_repo_clean():
+    assert locklint.run(ROOT) == []
+
+
+# --------------------------------------------------------------------- #
+# findings / baseline / CLI gate
+# --------------------------------------------------------------------- #
+def _finding(rule="LK402", obj="X.y/_f"):
+    return findings_lib.Finding(
+        rule=rule,
+        severity="error",
+        pass_name="locklint",
+        file="scratch.py",
+        line=7,
+        obj=obj,
+        message="m",
+    )
+
+
+def test_baseline_diff_new_and_stale():
+    f = _finding()
+    new, stale = findings_lib.diff_baseline([f], [])
+    assert [x.key for x in new] == [f.key]
+    baseline = [f.to_dict(), _finding(obj="gone/long-ago").to_dict()]
+    new, stale = findings_lib.diff_baseline([f], baseline)
+    assert new == []
+    assert stale == [("LK402", "scratch.py", "gone/long-ago")]
+
+
+def test_baseline_keys_ignore_line_churn():
+    a, b = _finding(), _finding()
+    object.__setattr__(b, "line", 99)
+    assert a.key == b.key
+
+
+def test_cli_strict_clean_passes(tmp_path, capsys):
+    report = tmp_path / "report.json"
+    rc = cli.main(
+        [
+            "--passes",
+            "planlint,locklint",
+            "--baseline",
+            "none",
+            "--strict",
+            "--json",
+            str(report),
+        ]
+    )
+    assert rc == 0
+    data = json.loads(report.read_text())
+    assert data["version"] == 1
+    assert data["findings"] == []
+    out = capsys.readouterr().out
+    assert "planlint: 0 finding(s)" in out
+
+
+def test_cli_strict_fails_on_stale_baseline(tmp_path, capsys):
+    baseline = tmp_path / "baseline.json"
+    baseline.write_text(
+        json.dumps(findings_lib.dump_findings([_finding(obj="stale/entry")]))
+    )
+    rc = cli.main(
+        ["--passes", "planlint", "--baseline", str(baseline), "--strict"]
+    )
+    assert rc == 1
+    assert "stale" in capsys.readouterr().out
+
+
+def test_cli_rejects_unknown_pass():
+    with pytest.raises(SystemExit):
+        cli.main(["--passes", "nosuchpass"])
+
+
+def test_repo_baseline_is_reviewed_and_empty():
+    # the committed steady state: zero residual findings. If a finding
+    # must be baselined, review it and update this pin deliberately.
+    baseline = findings_lib.load_baseline(
+        f"{ROOT}/analysis/baseline.json"
+    )
+    assert baseline == []

@@ -2,7 +2,6 @@
 
 import json
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp

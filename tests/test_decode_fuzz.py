@@ -21,9 +21,8 @@ property tests skip but the deterministic corpus below still pins every
 class on every path.
 """
 
-import numpy as np
-import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 try:

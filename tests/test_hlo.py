@@ -1,9 +1,5 @@
 """HLO collective parser: synthetic text + a real compiled module."""
 
-import jax
-import jax.numpy as jnp
-import pytest
-
 from repro.launch import hlo
 
 

@@ -1,6 +1,5 @@
 """Flash-attention Pallas kernel vs jnp oracle: shape/dtype sweeps."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -5,12 +5,11 @@ import glob
 import json
 import os
 
-import jax
 import pytest
 
 from repro import configs
 from repro.configs import shapes as shapes_lib
-from repro.hw import TPU_V5E, roofline_terms
+from repro.hw import roofline_terms
 from repro.launch.mesh import data_axes
 
 ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")

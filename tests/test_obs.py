@@ -5,8 +5,6 @@ never changes a single output bit on any engine."""
 import json
 import threading
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

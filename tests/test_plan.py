@@ -19,7 +19,6 @@ Three layers of assurance:
 import hashlib
 import os
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -2,7 +2,6 @@
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import configs
 from repro.models import lm as lm_lib

@@ -1,13 +1,8 @@
 """Sharding-rule engine: spec resolution, legalization, cache specs."""
 
-import jax
 import jax.numpy as jnp
-import pytest
-from jax.sharding import PartitionSpec as P
 
-from repro import configs
 from repro.distributed import sharding as shard_lib
-from repro.launch import specs as specs_lib
 from tests.multidevice import run_with_devices
 
 _RULES_CODE = """

@@ -1,6 +1,5 @@
 """SSM blocks: chunkwise-parallel forward == sequential decode recurrence."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,11 +1,7 @@
 """Trainer: convergence, checkpoint/restart, preemption, stragglers."""
 
-import os
-
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro import configs
 from repro.data import loader
